@@ -1,0 +1,91 @@
+"""The paper's central systems claim: linear vs quadratic memory scaling.
+
+Compares Algorithm 1 (explicit pairwise phi(p_rel)) against Algorithm 2
+(factorized, standard SDPA inside) for SE(2) Fourier attention:
+
+  * peak temp memory of the jitted computation (from compiled
+    ``memory_analysis`` — an analytic, device-independent measure), and
+  * wall time per call on this host (CPU; relative scaling is the signal).
+
+Algorithm 1 memory grows O(N^2) (it materializes (N, N, d) phi-transformed
+keys); Algorithm 2 grows O(N). The crossover makes 32k-token scenes
+feasible — the paper's enabling observation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention, encodings
+from repro.kernels import ref as kref
+
+
+def _linear_sdpa(q, k, v, mask=None, scale=None):
+    """Linear-memory SDPA (chunked online softmax) — the FlashAttention
+    stand-in Algorithm 2 routes through (on TPU: the Pallas kernel)."""
+    assert mask is None
+    out = kref.mha_chunked(q[None, None], k[None, None], v[None, None],
+                           scale=scale, chunk_size=128)
+    return out[0, 0]
+
+
+def measure(n_tokens: int, linear: bool, head_dim: int = 12,
+            num_terms: int = 8):
+    enc = encodings.SE2Fourier(head_dim=head_dim, num_terms=num_terms)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(n_tokens, head_dim)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(n_tokens, head_dim)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n_tokens, head_dim)), jnp.float32)
+    pose = jnp.asarray(
+        np.concatenate([rng.uniform(-3, 3, (n_tokens, 2)),
+                        rng.uniform(-np.pi, np.pi, (n_tokens, 1))], -1),
+        jnp.float32)
+
+    if linear:
+        fn = lambda q, k, v, p: attention.relative_attention_linear(
+            enc, q, k, v, p, p, sdpa_fn=_linear_sdpa)
+    else:
+        fn = lambda q, k, v, p: attention.relative_attention_quadratic(
+            enc, q, k, v, p, p)
+    jitted = jax.jit(fn)
+    lowered = jitted.lower(q, k, v, pose)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    temp = getattr(mem, "temp_size_in_bytes", 0)
+    out = jitted(q, k, v, pose)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        jitted(q, k, v, pose).block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    return temp, dt
+
+
+def run(report):
+    sizes = [64, 128, 256, 512, 1024]
+    quad_mem, lin_mem = {}, {}
+    for n in sizes:
+        tq, dq = measure(n, linear=False)
+        tl, dl = measure(n, linear=True)
+        quad_mem[n], lin_mem[n] = tq, tl
+        report(f"attn_scaling/quadratic_n{n}", dq * 1e6,
+               f"temp_bytes={tq}")
+        report(f"attn_scaling/linear_n{n}", dl * 1e6,
+               f"temp_bytes={tl}")
+    # scaling-exponent check over the last doubling
+    q_ratio = quad_mem[1024] / max(quad_mem[256], 1)
+    l_ratio = lin_mem[1024] / max(lin_mem[256], 1)
+    report("attn_scaling/quad_mem_ratio_4x_tokens", q_ratio,
+           "expect ~16 (O(N^2))")
+    report("attn_scaling/linear_mem_ratio_4x_tokens", l_ratio,
+           "expect ~4 (O(N))")
+    assert q_ratio > 8.0, q_ratio
+    assert l_ratio < 8.0, l_ratio
+
+
+if __name__ == "__main__":
+    run(lambda name, val, extra="": print(f"{name},{val},{extra}"))

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: wall time of the XLA paths + interpret-mode
+parity checks of the Pallas kernels.
+
+On this CPU host the Pallas kernels execute in interpret mode (Python), so
+their wall time is not meaningful; the benchmark therefore reports
+  * the XLA linear-memory attention path (what the CPU/dry-run actually
+    runs),
+  * the SE(2) Fourier projection in its fused-XLA form,
+and validates Pallas outputs against the oracle at benchmark shapes
+(the TPU-timing slot in the CSV is the integration point for real
+hardware runs).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encodings
+from repro.kernels import ops, ref
+from repro.kernels.se2_project import se2_fourier_project
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    b, h, s, d = 1, 4, 1024, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+
+    chunked = jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="chunked",
+                                                    causal=True))
+    reference = jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="ref",
+                                                      causal=True))
+    report("kernels/mha_chunked_1k_us", _time(chunked, q, k, v) * 1e6)
+    report("kernels/mha_reference_1k_us", _time(reference, q, k, v) * 1e6)
+
+    # parity of the Pallas kernel (interpret) against the oracle at a
+    # benchmark-relevant shape
+    qs = q[:, :, :256].astype(jnp.float32)
+    ks = k[:, :, :256].astype(jnp.float32)
+    vs = v[:, :, :256].astype(jnp.float32)
+    flash = ops.flash_attention(qs, ks, vs, causal=True, block_q=64,
+                                block_k=64, interpret=True)
+    want = ref.mha_reference(qs, ks, vs, causal=True)
+    err = float(jnp.max(jnp.abs(flash - want)))
+    report("kernels/flash_interpret_parity_maxerr", err)
+    assert err < 1e-4, err
+
+    # SE(2) Fourier projection: fused-XLA timing + Pallas parity
+    enc = encodings.SE2Fourier(head_dim=24, num_terms=18)
+    x = jnp.asarray(rng.normal(size=(2048, 24)), jnp.float32)
+    pose = jnp.asarray(
+        np.concatenate([rng.uniform(-3, 3, (2048, 2)),
+                        rng.uniform(-np.pi, np.pi, (2048, 1))], -1),
+        jnp.float32)
+    xla_proj = jax.jit(lambda x, p: enc.transform_k(x, p))
+    report("kernels/se2_project_xla_2048tok_us", _time(xla_proj, x, pose) * 1e6)
+    pallas_out = se2_fourier_project(x[:256], pose[:256], enc, "k",
+                                     block_t=128, interpret=True)
+    err = float(jnp.max(jnp.abs(pallas_out - enc.transform_k(x[:256],
+                                                             pose[:256]))))
+    report("kernels/se2_project_parity_maxerr", err)
+    assert err < 1e-4, err
+
+
+if __name__ == "__main__":
+    run(lambda name, val, extra="": print(f"{name},{val},{extra}"))

@@ -1,0 +1,94 @@
+"""Benchmark harness: one module per paper table/figure + roofline summary.
+
+Prints ``name,value,notes`` CSV rows. Modules:
+
+  approx_error       — paper Fig. 3/4 (Fourier truncation error)
+  attention_scaling  — the linear-vs-quadratic memory claim (Sec. II-B)
+  agent_sim_table1   — Table I proxy on synthetic scenes (NLL by encoding)
+  adaptive_basis     — beyond-paper: scale-adaptive basis truncation
+  kernel_bench       — kernel micro-times + Pallas/oracle parity
+  roofline_summary   — aggregates experiments/dryrun/*.json if present
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+
+def _report(name, value, extra=""):
+    print(f"{name},{value},{extra}", flush=True)
+
+
+def roofline_summary(report):
+    here = os.path.dirname(os.path.abspath(__file__))
+    d = os.path.join(here, "..", "experiments", "dryrun")
+    if not os.path.isdir(d):
+        report("roofline/available", 0, "run repro.launch.dryrun first")
+        return
+    n_ok = n_err = 0
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(d, name)) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            n_ok += 1
+            t = rec.get("terms")
+            if t is None:    # multi-pod cells are compile proofs only
+                report(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+                       "compiled",
+                       f"hbm_gib={rec.get('hbm_per_chip_gib', 0):.2f}")
+                continue
+            report(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+                   t["bound_s"],
+                   f"dom={t['dominant']} compute_ms={t['compute_s']*1e3:.2f} "
+                   f"mem_ms={t['memory_s']*1e3:.2f} "
+                   f"coll_ms={t['collective_s']*1e3:.2f}")
+        elif rec.get("status") == "error":
+            n_err += 1
+    report("roofline/cells_ok", n_ok)
+    report("roofline/cells_error", n_err)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    ap.add_argument("--table1-steps", type=int, default=150)
+    args = ap.parse_args()
+
+    from benchmarks import (adaptive_basis, agent_sim_table1, approx_error,
+                            attention_scaling, kernel_bench)
+
+    benches = {
+        "approx_error": lambda: approx_error.run(_report),
+        "attention_scaling": lambda: attention_scaling.run(_report),
+        "adaptive_basis": lambda: adaptive_basis.run(_report),
+        "kernel_bench": lambda: kernel_bench.run(_report),
+        "agent_sim_table1": lambda: agent_sim_table1.run(
+            _report, steps=args.table1_steps),
+        "roofline_summary": lambda: roofline_summary(_report),
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    failures = 0
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            _report(f"{name}/elapsed_s", f"{time.time() - t0:.1f}")
+        except Exception as e:
+            failures += 1
+            _report(f"{name}/FAILED", type(e).__name__, str(e)[:200])
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Reproduce paper Fig. 3 (approximation error vs radius / basis size) as an
+ASCII table + CSV on stdout.
+
+Run:  PYTHONPATH=src:. python examples/approx_error_figure.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+import numpy as np
+
+from benchmarks.approx_error import BF16_EPS, FP16_EPS, spectral_error
+
+RADII = (1.0, 2.0, 4.0, 8.0)
+BASES = (8, 12, 18, 28)
+
+
+def main():
+    print("spectral-norm approximation error "
+          "|| phi(rel) - phi_q phi_k ||_2 (mean over 512 samples)")
+    print(f"{'radius':>8} | " + " | ".join(f"F={f:<3d}" for f in BASES))
+    print("-" * (10 + 11 * len(BASES)))
+    rows = []
+    for r in RADII:
+        vals = [spectral_error(r, f, n_samples=256)["mean"] for f in BASES]
+        rows.append((r, vals))
+        print(f"{r:8.1f} | " + " | ".join(f"{v:8.1e}" for v in vals))
+    print(f"\nreference: fp16 eps = {FP16_EPS:.1e}, bf16 eps = {BF16_EPS:.1e}")
+    print("paper's operating points: (r=2, F=12), (r=4, F=18), (r=8, F=28) "
+          "all ~1e-3  [Fig. 3]")
+    print("\ncsv:")
+    print("radius," + ",".join(f"F{f}" for f in BASES))
+    for r, vals in rows:
+        print(f"{r}," + ",".join(f"{v:.3e}" for v in vals))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: linear-memory SE(2)-invariant attention in 60 lines.
+
+Demonstrates the paper's core result end to end:
+  1. build an SE(2) Fourier encoding,
+  2. run Algorithm 2 (linear memory) and the Algorithm 1 oracle,
+  3. show they agree, and that the output is invariant to re-expressing
+     every pose in a different global frame.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import se2
+from repro.core.attention import (relative_attention_linear,
+                                  relative_attention_quadratic)
+from repro.core.encodings import SE2Fourier
+
+rng = np.random.default_rng(0)
+N, HEAD_DIM = 32, 24
+
+# a scene: 32 tokens with features and SE(2) poses (x, y, heading)
+q = jnp.asarray(rng.normal(size=(N, HEAD_DIM)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(N, HEAD_DIM)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(N, HEAD_DIM)), jnp.float32)
+poses = jnp.asarray(
+    np.concatenate([rng.uniform(-3, 3, (N, 2)),            # positions <= |4|
+                    rng.uniform(-np.pi, np.pi, (N, 1))], -1), jnp.float32)
+
+enc = SE2Fourier(head_dim=HEAD_DIM, num_terms=18)   # F=18: err ~1e-3 @ r<=4
+print(f"encoding: head_dim={enc.head_dim} -> expanded c={enc.expanded_dim} "
+      f"({enc.num_blocks} blocks x (4F+2))")
+
+# --- Algorithm 2 (linear memory) vs Algorithm 1 (quadratic oracle) --------
+out_linear = relative_attention_linear(enc, q, k, v, poses, poses)
+out_quad = relative_attention_quadratic(enc, q, k, v, poses, poses)
+err = float(jnp.max(jnp.abs(out_linear - out_quad)))
+print(f"linear vs quadratic max |diff|: {err:.2e}   (Fourier truncation)")
+assert err < 5e-3
+
+# --- SE(2) invariance: re-express all poses in a shifted+rotated frame ----
+z = jnp.asarray([1.5, -0.7, 2.1], jnp.float32)       # arbitrary new frame
+poses_z = se2.compose(jnp.broadcast_to(z, poses.shape), poses)
+out_z = relative_attention_linear(enc, q, k, v, poses_z, poses_z)
+gap = float(jnp.max(jnp.abs(out_linear - out_z)))
+print(f"invariance gap under global transform: {gap:.2e}")
+assert gap < 2e-2
+
+# --- and the memory point: no (N, N) tensor was ever built ---------------
+print(f"largest intermediate in Alg 2: ({N}, {enc.expanded_dim}) "
+      f"— linear in N. Alg 1 builds ({N}, {N}, {HEAD_DIM}).")
+print("OK")

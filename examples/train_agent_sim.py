@@ -1,0 +1,91 @@
+"""End-to-end driver: train an agent-simulation model with SE(2) Fourier
+attention on procedurally generated driving scenes.
+
+This is the paper's task (Sec. IV-B) at CPU-runnable scale by default
+(--preset small trains a ~1.1M-param model for 300 steps in a few minutes);
+``--preset 100m`` is the ~100M-parameter configuration for a real
+accelerator. Uses the full production substrate: sharded data pipeline,
+fault-tolerant trainer with checkpointing, NaN guard, step-time monitor.
+
+Run:  PYTHONPATH=src python examples/train_agent_sim.py --steps 300
+"""
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import scenarios
+from repro.data.pipeline import ShardedIterator
+from repro.nn import module as nnm
+from repro.nn.agent_sim import AgentSimConfig, AgentSimModel, action_nll
+from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
+from repro.optim.transforms import apply_updates
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+log = logging.getLogger("train_agent_sim")
+
+PRESETS = {
+    # ~1.1M params; a few minutes of CPU
+    "small": dict(d_model=96, num_layers=3, num_heads=4, head_dim=24,
+                  d_ff=384),
+    # ~100M params; the paper-scale example driver for real hardware
+    "100m": dict(d_model=768, num_layers=12, num_heads=12, head_dim=24,
+                 d_ff=3072),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--encoding", default="se2_fourier",
+                    choices=["absolute", "rope2d", "se2_repr", "se2_fourier"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_agent_sim")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    scen = scenarios.ScenarioConfig(num_map=24, num_agents=8, num_steps=12)
+    cfg = AgentSimConfig(num_actions=scen.num_actions,
+                         encoding=args.encoding, fourier_terms=12,
+                         **PRESETS[args.preset])
+    model = AgentSimModel(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(0))
+    n = nnm.count_params(model.specs())
+    log.info("encoding=%s params=%.2fM", args.encoding, n / 1e6)
+
+    opt = chain(clip_by_global_norm(1.0),
+                adamw(warmup_cosine(args.lr, 20, args.steps)))
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, _ = model(p, batch)
+            return action_nll(logits, batch["actions"], batch["agent_valid"])
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, {"loss": loss}
+
+    def mk(seed, idx, bs):
+        b = scenarios.generate_batch(seed, idx, bs, scen)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    data = ShardedIterator(mk, batch_size=args.batch, seed=0)
+    trainer = Trainer(step, params, opt.init(params), data, args.ckpt_dir,
+                      TrainerConfig(total_steps=args.steps, ckpt_every=100,
+                                    log_every=20),
+                      metrics_cb=lambda s, m: log.info(
+                          "step %d nll %.4f (%.2fs/step)", s, m["loss"],
+                          m["sec_per_step"]))
+    trainer.restore_if_available()
+    out = trainer.run()
+    log.info("done: %s; first-20 nll %.3f -> last-20 nll %.3f", out,
+             sum(trainer.history[:20]) / 20,
+             sum(trainer.history[-20:]) / 20)
+    data.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: atomic/async/keep-k manager with elastic restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,9 @@
+"""Architecture configs + shapes. Import side effect: registry population."""
+from repro.configs import archs  # noqa: F401  (registers the 10 architectures)
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, all_configs,
+                                get_config, register)
+
+ARCH_NAMES = sorted(all_configs())
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "all_configs",
+           "get_config", "register", "ARCH_NAMES"]

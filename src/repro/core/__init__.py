@@ -1,0 +1,30 @@
+"""Core library: SE(2) group math, Fourier machinery, relative attention.
+
+This package holds the paper's primary contribution — linear-memory
+SE(2)-invariant scaled dot-product attention — as composable, framework-
+agnostic JAX functions. Higher layers (models, kernels, launchers) build on
+these primitives.
+"""
+from repro.core import attention, encodings, fourier, se2
+from repro.core.attention import (
+    relative_attention_linear,
+    relative_attention_quadratic,
+    sdpa_reference,
+)
+from repro.core.encodings import (
+    ENCODINGS,
+    AbsoluteEncoding,
+    GroupEncoding,
+    Rope1D,
+    Rope2D,
+    SE2Fourier,
+    SE2Repr,
+    make_encoding,
+)
+
+__all__ = [
+    "attention", "encodings", "fourier", "se2",
+    "relative_attention_linear", "relative_attention_quadratic",
+    "sdpa_reference", "ENCODINGS", "AbsoluteEncoding", "GroupEncoding",
+    "Rope1D", "Rope2D", "SE2Fourier", "SE2Repr", "make_encoding",
+]

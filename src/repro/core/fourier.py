@@ -1,0 +1,129 @@
+"""Fourier-series machinery for the SE(2) Fourier attention encoding.
+
+The paper approximates ``cos(u_m(theta))`` and ``sin(u_m(theta))`` — where
+``u_m(theta) = x_m cos(theta) + y_m sin(theta)`` for the x-block and
+``u_m(theta) = -x_m sin(theta) + y_m cos(theta)`` for the y-block — with a
+truncated Fourier series in ``theta`` using the basis
+
+    g_0(z) = 1
+    g_i(z) = sin(((i + 1) / 2) z)   for odd i
+    g_i(z) = cos((i / 2) z)         for even i
+
+The coefficients (paper Eq. 14/15) are computed by numerical quadrature with
+``2F`` uniformly spaced points on ``[-pi, pi)``; because the integrand is
+2*pi-periodic the rectangle rule is spectrally accurate (it is exactly the
+real DFT of the sampled function).
+
+Everything here is pure jnp and differentiable w.r.t. the positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def basis_frequencies(num_terms: int) -> np.ndarray:
+    """Integer frequency of each basis element g_i (0, 1, 1, 2, 2, ...)."""
+    i = np.arange(num_terms)
+    return np.where(i % 2 == 0, i // 2, (i + 1) // 2)
+
+
+def eval_basis(z, num_terms: int):
+    """Evaluate ``[g_0(z), ..., g_{F-1}(z)]``; output shape ``z.shape + (F,)``.
+
+    Vectorized: build frequency vector, take cos on even slots / sin on odd.
+    """
+    freqs = jnp.asarray(basis_frequencies(num_terms), dtype=z.dtype)
+    is_odd = jnp.asarray(np.arange(num_terms) % 2 == 1)
+    zf = z[..., None] * freqs
+    return jnp.where(is_odd, jnp.sin(zf), jnp.cos(zf))
+
+
+@functools.lru_cache(maxsize=None)
+def _quadrature_constants(num_terms: int):
+    """Static quadrature nodes and the (2F, F) projection matrix.
+
+    ``proj[j, i] = a_i * g_i(z_j) / (2F)`` so that for samples
+    ``f_j = f(z_j)`` the Fourier coefficients are ``coeffs = f @ proj``.
+    Computed in float64 numpy for accuracy; cached per basis size.
+    """
+    f = int(num_terms)
+    nodes = -np.pi + 2.0 * np.pi * np.arange(2 * f) / (2 * f)
+    freqs = basis_frequencies(f)
+    i = np.arange(f)
+    g = np.where(
+        i[None, :] % 2 == 1,
+        np.sin(nodes[:, None] * freqs[None, :]),
+        np.cos(nodes[:, None] * freqs[None, :]),
+    )
+    a = np.where(i == 0, 1.0, 2.0)
+    proj = g * a[None, :] / (2 * f)
+    return nodes, proj
+
+
+def quadrature_nodes(num_terms: int, dtype=jnp.float32):
+    nodes, _ = _quadrature_constants(num_terms)
+    return jnp.asarray(nodes, dtype=dtype)
+
+
+def quadrature_projection(num_terms: int, dtype=jnp.float32):
+    _, proj = _quadrature_constants(num_terms)
+    return jnp.asarray(proj, dtype=dtype)
+
+
+def fourier_coefficients(fn_samples, num_terms: int):
+    """Coefficients of the basis fit given samples at the 2F quadrature nodes.
+
+    Args:
+      fn_samples: ``(..., 2F)`` samples of the target function at
+        :func:`quadrature_nodes`.
+      num_terms: basis size F.
+
+    Returns:
+      ``(..., F)`` coefficients c such that ``f(z) ~= sum_i c_i g_i(z)``.
+    """
+    proj = quadrature_projection(num_terms, dtype=fn_samples.dtype)
+    return fn_samples @ proj
+
+
+def xy_coefficients(x, y, num_terms: int):
+    """The four coefficient vectors used by the SE(2) Fourier encoding.
+
+    For key position ``(x, y)`` (arbitrary leading batch shape) returns
+    ``(gamma_x, lambda_x, gamma_y, lambda_y)``, each ``(..., F)``:
+
+      gamma_x: coefficients of cos(u^x(z)),  u^x(z) =  x cos z + y sin z
+      lambda_x: coefficients of sin(u^x(z))
+      gamma_y: coefficients of cos(u^y(z)),  u^y(z) = -x sin z + y cos z
+      lambda_y: coefficients of sin(u^y(z))
+    """
+    nodes = quadrature_nodes(num_terms, dtype=x.dtype)
+    cz, sz = jnp.cos(nodes), jnp.sin(nodes)
+    u_x = x[..., None] * cz + y[..., None] * sz
+    u_y = -x[..., None] * sz + y[..., None] * cz
+    proj = quadrature_projection(num_terms, dtype=x.dtype)
+    gamma_x = jnp.cos(u_x) @ proj
+    lambda_x = jnp.sin(u_x) @ proj
+    gamma_y = jnp.cos(u_y) @ proj
+    lambda_y = jnp.sin(u_y) @ proj
+    return gamma_x, lambda_x, gamma_y, lambda_y
+
+
+def approx_cos_sin(x, y, theta, num_terms: int, which: str = "x"):
+    """Truncated-series approximation of ``(cos(u(theta)), sin(u(theta)))``.
+
+    Used by tests and the approximation-error benchmark (paper Fig. 3/4).
+    """
+    gx, lx, gy, ly = xy_coefficients(x, y, num_terms)
+    b = eval_basis(theta, num_terms)
+    if which == "x":
+        gamma, lam = gx, lx
+    elif which == "y":
+        gamma, lam = gy, ly
+    else:
+        raise ValueError(f"which must be 'x' or 'y', got {which!r}")
+    cos_u = jnp.sum(b * gamma, axis=-1)
+    sin_u = jnp.sum(b * lam, axis=-1)
+    return cos_u, sin_u

@@ -1,0 +1,101 @@
+"""SE(2) group operations.
+
+Poses are stored as arrays whose trailing dimension is 3: ``(x, y, theta)``.
+All functions broadcast over leading dimensions and are jit/vmap friendly.
+
+The group product follows the usual convention for rigid transforms acting on
+the plane: a pose ``p = (x, y, theta)`` corresponds to the homogeneous matrix
+
+    psi(p) = [[cos t, -sin t, x],
+              [sin t,  cos t, y],
+              [0,      0,     1]]
+
+so that ``psi(p1 @ p2) = psi(p1) psi(p2)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wrap_angle(theta):
+    """Wrap an angle (radians) into ``[-pi, pi)``."""
+    return (theta + jnp.pi) % (2.0 * jnp.pi) - jnp.pi
+
+
+def identity(shape=(), dtype=jnp.float32):
+    """Identity pose(s) of the given leading shape."""
+    return jnp.zeros(tuple(shape) + (3,), dtype=dtype)
+
+
+def compose(p1, p2):
+    """Group product ``p1 * p2`` (apply p2 in the frame of p1)."""
+    x1, y1, t1 = p1[..., 0], p1[..., 1], p1[..., 2]
+    x2, y2, t2 = p2[..., 0], p2[..., 1], p2[..., 2]
+    c, s = jnp.cos(t1), jnp.sin(t1)
+    x = x1 + c * x2 - s * y2
+    y = y1 + s * x2 + c * y2
+    t = wrap_angle(t1 + t2)
+    return jnp.stack([x, y, t], axis=-1)
+
+
+def inverse(p):
+    """Group inverse: ``compose(inverse(p), p) == identity``."""
+    x, y, t = p[..., 0], p[..., 1], p[..., 2]
+    c, s = jnp.cos(t), jnp.sin(t)
+    xi = -(c * x + s * y)
+    yi = -(-s * x + c * y)
+    return jnp.stack([xi, yi, wrap_angle(-t)], axis=-1)
+
+
+def relative(p_n, p_m):
+    """Relative pose ``p_{n->m} = p_n^{-1} p_m``.
+
+    Broadcasts: pass ``p_n[..., :, None, :]`` and ``p_m[..., None, :, :]`` to
+    get the full pairwise grid.
+    """
+    xn, yn, tn = p_n[..., 0], p_n[..., 1], p_n[..., 2]
+    xm, ym, tm = p_m[..., 0], p_m[..., 1], p_m[..., 2]
+    c, s = jnp.cos(tn), jnp.sin(tn)
+    dx, dy = xm - xn, ym - yn
+    x_rel = c * dx + s * dy
+    y_rel = -s * dx + c * dy
+    t_rel = wrap_angle(tm - tn)
+    return jnp.stack([x_rel, y_rel, t_rel], axis=-1)
+
+
+def matrix(p):
+    """Homogeneous 3x3 matrix representation ``psi(p)``."""
+    x, y, t = p[..., 0], p[..., 1], p[..., 2]
+    c, s = jnp.cos(t), jnp.sin(t)
+    zeros = jnp.zeros_like(x)
+    ones = jnp.ones_like(x)
+    row0 = jnp.stack([c, -s, x], axis=-1)
+    row1 = jnp.stack([s, c, y], axis=-1)
+    row2 = jnp.stack([zeros, zeros, ones], axis=-1)
+    return jnp.stack([row0, row1, row2], axis=-2)
+
+
+def from_matrix(m):
+    """Inverse of :func:`matrix`."""
+    x = m[..., 0, 2]
+    y = m[..., 1, 2]
+    t = jnp.arctan2(m[..., 1, 0], m[..., 0, 0])
+    return jnp.stack([x, y, t], axis=-1)
+
+
+def rot2(theta):
+    """2D rotation matrix ``rho(theta)`` with trailing shape (2, 2)."""
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    row0 = jnp.stack([c, -s], axis=-1)
+    row1 = jnp.stack([s, c], axis=-1)
+    return jnp.stack([row0, row1], axis=-2)
+
+
+def transform_points(p, pts):
+    """Apply pose ``p`` to 2D points ``pts`` (trailing dim 2)."""
+    x, y, t = p[..., 0:1], p[..., 1:2], p[..., 2]
+    c, s = jnp.cos(t)[..., None], jnp.sin(t)[..., None]
+    px, py = pts[..., 0:1], pts[..., 1:2]
+    nx = c * px - s * py + x
+    ny = s * px + c * py + y
+    return jnp.concatenate([nx, ny], axis=-1)

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic generators + sharded, checkpointable pipeline."""
+from repro.data import pipeline, scenarios, synthetic_lm
+from repro.data.pipeline import ShardedIterator
+
+__all__ = ["pipeline", "scenarios", "synthetic_lm", "ShardedIterator"]

@@ -1,0 +1,330 @@
+"""Public attention ops: padded, autodiff-capable wrappers over the kernels.
+
+``attention(...)`` is the single entry point the model stack uses; ``impl``
+selects between:
+
+  * ``"flash"``   — the Pallas TPU kernel (forward) + a linear-memory blocked
+    backward. On CPU the kernel runs in interpret mode (used by tests).
+  * ``"chunked"`` — pure-XLA linear-memory online-softmax attention
+    (``ref.mha_chunked``); the implementation lowered in the multi-pod
+    dry-run, and the default on CPU where interpret-mode Pallas is slow.
+  * ``"ref"``     — O(S^2) reference (small inputs / oracle).
+
+The flash path is wired with ``jax.custom_vjp``: the forward runs the Pallas
+kernel and also emits the log-sum-exp rows; the backward recomputes block
+logits chunk-by-chunk (classic FlashAttention recurrence) so training stays
+linear-memory end to end.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+
+_NEG_INF = -1e30
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, multiple, axis, value=0.0):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x, 0
+    pad = multiple - rem
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), pad
+
+
+# ---------------------------------------------------------------------------
+# Flash path: Pallas forward + blocked-XLA backward via custom_vjp.
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times, *, causal,
+                      window, softcap, scale, block_q, block_k, interpret):
+    """Pad sequences to block multiples and head dims to lane multiples."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    # Pad head dims to a multiple of 128 (MXU lane width); zero-padding the
+    # contraction dim leaves scores unchanged, zero-padding dv is sliced off.
+    q, _ = _pad_to(q, 128, 3)
+    k, _ = _pad_to(k, 128, 3)
+    v, dv_pad = _pad_to(v, 128, 3)
+    # Pad sequence lengths to block multiples; padded keys get segment -1.
+    need_seg = (sq % block_q != 0) or (sk % block_k != 0)
+    if q_seg is None and need_seg:
+        q_seg = jnp.zeros((b, sq), jnp.int32)
+        k_seg = jnp.zeros((b, sk), jnp.int32)
+    if q_seg is not None:
+        q_seg, _ = _pad_to(q_seg, block_q, 1, value=0)
+        k_seg, _ = _pad_to(k_seg, block_k, 1, value=-1)
+    if q_times is not None:
+        q_times, _ = _pad_to(q_times, block_q, 1, value=0)
+        k_times, _ = _pad_to(k_times, block_k, 1, value=0)
+    q, q_pad = _pad_to(q, block_q, 2)
+    k, _ = _pad_to(k, block_k, 2)
+    v, _ = _pad_to(v, block_k, 2)
+    out = fa.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_segment_ids=q_seg, k_segment_ids=k_seg,
+        q_times=q_times, k_times=k_times,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    if q_pad:
+        out = out[:, :, :sq, :]
+    if dv_pad:
+        out = out[..., :dv]
+    return out
+
+
+def _bwd_chunked(saved, g, *, causal, window, softcap, scale, chunk_size=512):
+    """Linear-memory attention backward (FlashAttention recurrence in XLA).
+
+    Recomputes block logits from (q, k) chunk by chunk; never materializes
+    an (Sq, Sk) tensor. Handles GQA by accumulating dk/dv over head groups.
+    """
+    q, k, v, o, lse, q_seg, k_seg, q_times, k_times = saved
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    qf = q.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    of = o.astype(jnp.float32)
+    delta = jnp.sum(gf * of, axis=-1)                    # (b, hq, sq)
+
+    if sk % chunk_size != 0:
+        pad = chunk_size - sk % chunk_size
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if k_seg is None:
+            k_seg = jnp.zeros((b, sk), jnp.int32)
+            q_seg = jnp.zeros((b, sq), jnp.int32)
+        k_seg = jnp.pad(k_seg, ((0, 0), (0, pad)), constant_values=-1)
+        if k_times is not None:
+            k_times = jnp.pad(k_times, ((0, 0), (0, pad)))
+    sk_p = k.shape[2]
+    n_chunks = sk_p // chunk_size
+
+    def body(dq, idx):
+        start = idx * chunk_size
+        kc = jax.lax.dynamic_slice_in_dim(k, start, chunk_size, 2)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, chunk_size, 2)
+        kcr = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        vcr = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        s_pre = jnp.einsum("bhnd,bhmd->bhnm", qf, kcr) * scale
+        if softcap is not None and softcap > 0:
+            t = jnp.tanh(s_pre / softcap)
+            s = t * softcap
+            dcap = 1.0 - t * t
+        else:
+            s = s_pre
+            dcap = None
+        if q_times is not None:
+            rows = q_times[:, :, None]
+            cols = jax.lax.dynamic_slice_in_dim(
+                k_times, start, chunk_size, 1)[:, None, :]
+            mask = jnp.ones((b, sq, chunk_size), bool)
+        else:
+            rows = jax.lax.broadcasted_iota(
+                jnp.int32, (sq, chunk_size), 0)[None]
+            cols = (jax.lax.broadcasted_iota(
+                jnp.int32, (sq, chunk_size), 1) + start)[None]
+            mask = jnp.ones((1, sq, chunk_size), bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        mask = mask[:, None]
+        if q_seg is not None:
+            ks = jax.lax.dynamic_slice_in_dim(k_seg, start, chunk_size, 1)
+            seg = (q_seg[:, :, None] == ks[:, None, :]) & (ks[:, None, :] >= 0)
+            mask = mask & seg[:, None]
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)
+        dp = jnp.einsum("bhnd,bhmd->bhnm", gf, vcr)
+        ds = p * (dp - delta[..., None])
+        if dcap is not None:
+            ds = ds * dcap
+        ds = ds * scale
+        dq = dq + jnp.einsum("bhnm,bhmd->bhnd", ds, kcr)
+        dkc = jnp.einsum("bhnm,bhnd->bhmd", ds, qf)
+        dvc = jnp.einsum("bhnm,bhnd->bhmd", p, gf)
+        if group > 1:
+            dkc = dkc.reshape(b, hkv, group, chunk_size, d).sum(axis=2)
+            dvc = dvc.reshape(b, hkv, group, chunk_size, dv).sum(axis=2)
+        return dq, (dkc, dvc)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, jnp.arange(n_chunks))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(b, hkv, sk_p, d)[:, :, :sk]
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(b, hkv, sk_p, dv)[:, :, :sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13))
+def _flash(q, k, v, q_seg, k_seg, q_times, k_times, causal, window, softcap,
+           scale, block_q, block_k, interpret):
+    return _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times,
+                             causal=causal, window=window, softcap=softcap,
+                             scale=scale, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+
+
+def _flash_fwd_rule(q, k, v, q_seg, k_seg, q_times, k_times, causal, window,
+                    softcap, scale, block_q, block_k, interpret):
+    out = _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times,
+                            causal=causal, window=window, softcap=softcap,
+                            scale=scale, block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    # LSE for the backward is recomputed cheaply from the chunked recurrence;
+    # we recover it from the forward pieces instead of plumbing a second
+    # kernel output: lse rows are re-derived in the backward's first pass.
+    lse = _lse_chunked(q, k, q_seg, k_seg, q_times, k_times, causal=causal,
+                       window=window, softcap=softcap, scale=scale)
+    return out, (q, k, v, out, lse, q_seg, k_seg, q_times, k_times)
+
+
+def _lse_chunked(q, k, q_seg, k_seg, q_times=None, k_times=None, *, causal,
+                 window, softcap, scale, chunk_size=512):
+    """Row log-sum-exp of the (masked, scaled, capped) logits, O(Sq) memory."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    if sk % chunk_size != 0:
+        pad = chunk_size - sk % chunk_size
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if k_seg is None:
+            k_seg = jnp.zeros((b, sk), jnp.int32)
+            q_seg = jnp.zeros((b, sq), jnp.int32)
+        k_seg = jnp.pad(k_seg, ((0, 0), (0, pad)), constant_values=-1)
+        if k_times is not None:
+            k_times = jnp.pad(k_times, ((0, 0), (0, pad)))
+    n_chunks = k.shape[2] // chunk_size
+    qf = q.astype(jnp.float32)
+
+    def body(carry, idx):
+        m, l = carry
+        start = idx * chunk_size
+        kc = jax.lax.dynamic_slice_in_dim(k, start, chunk_size, 2)
+        kc = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhnd,bhmd->bhnm", qf, kc) * scale
+        if softcap is not None and softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        if q_times is not None:
+            rows = q_times[:, :, None]
+            cols = jax.lax.dynamic_slice_in_dim(
+                k_times, start, chunk_size, 1)[:, None, :]
+            mask = jnp.ones((b, sq, chunk_size), bool)
+        else:
+            rows = jax.lax.broadcasted_iota(
+                jnp.int32, (sq, chunk_size), 0)[None]
+            cols = (jax.lax.broadcasted_iota(
+                jnp.int32, (sq, chunk_size), 1) + start)[None]
+            mask = jnp.ones((1, sq, chunk_size), bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        mask = mask[:, None]
+        if q_seg is not None:
+            ks = jax.lax.dynamic_slice_in_dim(k_seg, start, chunk_size, 1)
+            seg = (q_seg[:, :, None] == ks[:, None, :]) & (ks[:, None, :] >= 0)
+            mask = mask & seg[:, None]
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        l_new = l * jnp.exp(m - m_new) + jnp.where(
+            mask, jnp.exp(s - m_new[..., None]), 0.0).sum(-1)
+        return (m_new, l_new), None
+
+    m0 = jnp.full((b, hq, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    (m, l), _ = jax.lax.scan(body, (m0, l0), jnp.arange(n_chunks))
+    return m + jnp.log(jnp.maximum(l, 1e-30))
+
+
+def _flash_bwd_rule(causal, window, softcap, scale, block_q, block_k,
+                    interpret, saved, g):
+    dq, dk, dv = _bwd_chunked(saved, g, causal=causal, window=window,
+                              softcap=softcap, scale=scale)
+    return dq, dk, dv, None, None, None, None
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q, k, v, *, causal: bool = False,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    q_segment_ids=None, k_segment_ids=None,
+                    q_times=None, k_times=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """Differentiable flash attention (Pallas fwd, blocked-XLA bwd)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash(q, k, v, q_segment_ids, k_segment_ids, q_times, k_times,
+                  causal, window, softcap, scale, block_q, block_k, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher used by the model stack.
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
+              window: Optional[int] = None, softcap: Optional[float] = None,
+              scale: Optional[float] = None,
+              q_segment_ids=None, k_segment_ids=None,
+              q_times=None, k_times=None,
+              q_offset: int = 0,
+              block_q: int = 128, block_k: int = 128,
+              chunk_size: Optional[int] = None):
+    """Multi-head attention with selectable implementation.
+
+    ``impl="auto"`` picks flash on TPU and the chunked XLA path elsewhere.
+    ``q_offset`` (chunked/ref only) offsets query positions for decode.
+    ``q_times/k_times``: block-causal over explicit per-token times
+    (agent-simulation scenes).
+    """
+    if impl == "auto":
+        impl = "flash" if jax.default_backend() == "tpu" else "chunked"
+    unroll = False
+    if impl == "chunked_unrolled":   # dry-run mode: expand the chunk loop so
+        impl, unroll = "chunked", True  # cost_analysis sees every chunk
+    if impl == "flash":
+        if q_offset:
+            raise NotImplementedError("q_offset requires impl='chunked'/'ref'")
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               q_segment_ids=q_segment_ids,
+                               k_segment_ids=k_segment_ids,
+                               q_times=q_times, k_times=k_times,
+                               block_q=block_q, block_k=block_k)
+    if impl == "chunked":
+        return ref.mha_chunked(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               q_segment_ids=q_segment_ids,
+                               k_segment_ids=k_segment_ids,
+                               q_times=q_times, k_times=k_times,
+                               q_offset=q_offset, chunk_size=chunk_size,
+                               unroll=unroll)
+    if impl == "ref":
+        return ref.mha_reference(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale,
+                                 q_segment_ids=q_segment_ids,
+                                 k_segment_ids=k_segment_ids,
+                                 q_times=q_times, k_times=k_times,
+                                 q_offset=q_offset)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,223 @@
+"""Pure-jnp oracles for the attention kernels.
+
+These are the ground truth every Pallas kernel is tested against
+(``assert_allclose`` across shape/dtype sweeps). They are also usable
+implementations in their own right: ``mha_reference`` is O(S^2) memory,
+``mha_chunked`` is the linear-memory XLA fallback used on CPU and inside the
+dry-run (where Pallas-on-TPU cannot lower).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _length_mask(shape, kv_len):
+    """(…, Sk) mask of valid key positions given per-batch kv lengths."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+    return cols < kv_len
+
+
+def build_mask(sq: int, sk: int, *, causal: bool = False,
+               window: Optional[int] = None,
+               q_segment_ids=None, k_segment_ids=None,
+               q_times=None, k_times=None,
+               q_offset: int = 0):
+    """Boolean (…, sq, sk) attention mask; True = may attend.
+
+    ``q_offset`` shifts query positions (used when queries are a suffix of
+    the key sequence, e.g. chunked prefill / decode). ``q_times/k_times``
+    (…, S) replace token indices for the causal/window comparison —
+    block-causal attention over e.g. simulation timesteps (tokens with the
+    same time attend to each other bidirectionally).
+    """
+    if q_times is not None:
+        rows = q_times[..., :, None]
+        cols = k_times[..., None, :]
+        mask = jnp.ones(jnp.broadcast_shapes(rows.shape, cols.shape), bool)
+    else:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0) + q_offset
+        cols = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window is not None:
+        mask = mask & (cols > rows - window)
+    if q_segment_ids is not None and k_segment_ids is not None:
+        seg = (q_segment_ids[..., :, None] == k_segment_ids[..., None, :])
+        seg &= k_segment_ids[..., None, :] >= 0
+        mask = mask & seg
+    return mask
+
+
+def _maybe_softcap(s, softcap):
+    if softcap is not None and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _repeat_kv(k, num_q_heads):
+    """Broadcast KV heads to Q heads for grouped-query attention."""
+    b, hkv, s, d = k.shape
+    if hkv == num_q_heads:
+        return k
+    group = num_q_heads // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def mha_reference(q, k, v, *, causal: bool = False,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None,
+                  q_segment_ids=None, k_segment_ids=None,
+                  q_times=None, k_times=None,
+                  q_offset: int = 0):
+    """O(S^2)-memory multi-head attention oracle.
+
+    Shapes: q ``(B, Hq, Sq, Dqk)``; k ``(B, Hkv, Sk, Dqk)``;
+    v ``(B, Hkv, Sk, Dv)``. Hkv must divide Hq (GQA/MQA). Returns
+    ``(B, Hq, Sq, Dv)``.
+    """
+    b, hq, sq, d = q.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _maybe_softcap(s, softcap)
+    if q_times is not None:
+        mask = build_mask(sq, k.shape[2], causal=causal, window=window,
+                          q_times=q_times, k_times=k_times)[:, None]
+    elif hasattr(q_offset, "ndim") and getattr(q_offset, "ndim", 0) == 1:
+        # per-row query offsets (continuous batching: each slot has its own
+        # decode cursor)
+        rows = (jax.lax.broadcasted_iota(jnp.int32, (sq, k.shape[2]), 0)[None]
+                + q_offset[:, None, None])
+        cols = jax.lax.broadcasted_iota(jnp.int32, (sq, k.shape[2]), 1)[None]
+        mask = jnp.ones_like(rows, dtype=bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        mask = mask[:, None]
+    else:
+        mask = build_mask(sq, k.shape[2], causal=causal, window=window,
+                          q_offset=q_offset)[None, None]
+    if q_segment_ids is not None:
+        seg = build_mask(sq, k.shape[2], q_segment_ids=q_segment_ids,
+                         k_segment_ids=k_segment_ids)
+        mask = mask & seg[:, None]
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce uniform p over -inf logits -> force zeros
+    any_valid = mask.any(axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    return jnp.einsum("bhnm,bhmd->bhnd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def auto_chunk(sk: int, max_chunks: int = 64, base: int = 512) -> int:
+    """Chunk size capping the scan trip count (dry-run accuracy: unrolled
+    chunk loops must stay small enough to lower)."""
+    c = base
+    while sk > c * max_chunks:
+        c *= 2
+    return c
+
+
+def mha_chunked(q, k, v, *, causal: bool = False,
+                window: Optional[int] = None,
+                softcap: Optional[float] = None,
+                scale: Optional[float] = None,
+                q_segment_ids=None, k_segment_ids=None,
+                q_times=None, k_times=None,
+                q_offset: int = 0,
+                chunk_size: Optional[int] = None,
+                unroll: bool = False):
+    """Linear-memory attention in pure XLA: online softmax over KV chunks.
+
+    This mirrors the flash-attention recurrence with a ``lax.scan`` over key
+    chunks, so peak memory is O(Sq * chunk) instead of O(Sq * Sk). It is the
+    implementation used where the Pallas TPU kernel is unavailable (CPU
+    runs, dry-run lowering) and is the oracle's memory-scaling counterpart.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    if chunk_size is None:
+        chunk_size = auto_chunk(sk)
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    if sk % chunk_size != 0:
+        pad = chunk_size - sk % chunk_size
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if k_segment_ids is None:
+            k_segment_ids = jnp.zeros((b, sk), jnp.int32)
+            if q_segment_ids is None:
+                q_segment_ids = jnp.zeros((b, sq), jnp.int32)
+        k_segment_ids = jnp.pad(k_segment_ids, ((0, 0), (0, pad)),
+                                constant_values=-1)
+        if k_times is not None:
+            k_times = jnp.pad(k_times, ((0, 0), (0, pad)))
+    sk_p = k.shape[2]
+    n_chunks = sk_p // chunk_size
+    group = hq // hkv
+    qf = q.astype(jnp.float32)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        start = idx * chunk_size
+        kc = jax.lax.dynamic_slice_in_dim(k, start, chunk_size, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, chunk_size, axis=2)
+        kc = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        vc = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhnd,bhmd->bhnm", qf, kc) * scale
+        s = _maybe_softcap(s, softcap)
+        if q_times is not None:
+            rows = q_times[:, :, None]                       # (B, sq, 1)
+            cols = jax.lax.dynamic_slice_in_dim(k_times, start, chunk_size,
+                                                axis=1)[:, None, :]
+            mask = jnp.ones((b, sq, chunk_size), dtype=bool)
+        elif hasattr(q_offset, "ndim") and getattr(q_offset, "ndim", 0) == 1:
+            rows = (jax.lax.broadcasted_iota(jnp.int32, (sq, chunk_size), 0)
+                    [None] + q_offset[:, None, None])
+            cols = (jax.lax.broadcasted_iota(jnp.int32, (sq, chunk_size), 1)
+                    + start)[None]
+            mask = jnp.ones((b, sq, chunk_size), dtype=bool)
+        else:
+            rows = (jax.lax.broadcasted_iota(jnp.int32, (sq, chunk_size), 0)
+                    + q_offset)[None]
+            cols = (jax.lax.broadcasted_iota(jnp.int32, (sq, chunk_size), 1)
+                    + start)[None]
+            mask = jnp.ones((1, sq, chunk_size), dtype=bool)
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        mask = mask[:, None]
+        if q_segment_ids is not None:
+            ks = jax.lax.dynamic_slice_in_dim(k_segment_ids, start, chunk_size,
+                                              axis=1)
+            seg = (q_segment_ids[:, :, None] == ks[:, None, :]) & (
+                ks[:, None, :] >= 0)
+            mask = mask & seg[:, None]
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhnm,bhmd->bhnd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(n_chunks),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(v.dtype)

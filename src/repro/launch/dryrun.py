@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+_DOC = """Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+Per cell, three artifacts:
+
+  1. FULL config, rolled layer scans, production mesh — ``.lower().compile()``
+     must succeed. This is the sharding-coherence proof, and its
+     ``memory_analysis`` (which sees the O(L) stacked remat carries inside
+     the scan state) is the fits-in-HBM evidence.
+  2. Two DEPTH VARIANTS (2 and 4 scan iterations, full width) with layer
+     and attention-chunk loops FULLY UNROLLED — XLA's cost_analysis counts
+     while bodies once, so unrolled shallow variants give exact
+     per-iteration FLOPs / bytes / collective-bytes at production width.
+     The roofline extrapolates linearly to full depth (layer groups are
+     homogeneous; the two-point fit separates the per-layer slope from the
+     depth-independent intercept: embeddings, logits, optimizer, loss).
+
+The multi-pod pass (2x16x16) runs configuration 1 only: it exists to prove
+the "pod" axis shards. The roofline table is single-pod by definition.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.distributed.sharding import (DEFAULT_RULES, batch_sharding,
+                                        derive_opt_shardings,
+                                        sharding_for_specs, use_mesh_rules)
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.roofline import (CollectiveStats, model_flops_for,
+                                   parse_collectives, roofline_terms)
+from repro.nn import module as nnm
+from repro.nn.transformer import build_model
+from repro.optim import adafactor, adamw, chain, clip_by_global_norm
+from repro.runtime.steps import (batch_shardings, input_specs,
+                                 make_prefill_step, make_serve_step,
+                                 make_train_step)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+VARIANT_ITERS = (2, 4)
+
+
+def choose_optimizer(cfg):
+    """Adafactor for the 1T config (optimizer-state memory: see optim docs);
+    AdamW everywhere else."""
+    if cfg.name.startswith("kimi"):
+        return chain(clip_by_global_norm(1.0), adafactor(1e-4))
+    return chain(clip_by_global_norm(1.0), adamw(3e-4))
+
+
+def applicable(cfg, shape) -> bool:
+    if shape.name == "long_500k" and not cfg.long_context_ok:
+        return False
+    return True
+
+
+def _compile_step(cfg, shape, mesh, rules, unroll: bool):
+    """Lower + compile one step function; returns (compiled, t_lower, t_comp)."""
+    model = build_model(cfg, unroll=unroll)
+    specs = model.specs()
+    aparams = nnm.abstract_params(specs)
+    impl = "chunked_unrolled" if unroll else "chunked"
+    t0 = time.time()
+    with use_mesh_rules(mesh, rules):
+        param_sh = sharding_for_specs(specs, mesh, rules)
+        ins = input_specs(cfg, shape)
+        in_sh = batch_shardings(ins, mesh, rules)
+        if shape.mode == "train":
+            opt = choose_optimizer(cfg)
+            opt_abs = jax.eval_shape(opt.init, aparams)
+            opt_sh = derive_opt_shardings(specs, opt_abs, mesh, rules)
+            step = make_train_step(cfg, opt, remat=True, impl=impl,
+                                   unroll=unroll)
+            jitted = jax.jit(step, in_shardings=(param_sh, opt_sh, in_sh),
+                             out_shardings=(param_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(aparams, opt_abs, ins)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(cfg, impl=impl, unroll=unroll)
+            jitted = jax.jit(step, in_shardings=(param_sh, in_sh))
+            lowered = jitted.lower(aparams, ins)
+        else:
+            step = make_serve_step(cfg, impl=impl, unroll=unroll)
+            cache_sh = in_sh["cache"]
+            args = [aparams, ins["cache"], ins["tokens"], ins["index"]]
+            shs = [param_sh, cache_sh, in_sh["tokens"], in_sh["index"]]
+            if cfg.enc_dec:
+                args.append(ins["enc_out"])
+                shs.append(in_sh["enc_out"])
+            jitted = jax.jit(step, in_shardings=tuple(shs),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _analyze(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = parse_collectives(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll, mem)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, rules=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "full-attention arch at 500k decode "
+                          "(see DESIGN.md Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or DEFAULT_RULES
+    chips = mesh.devices.size
+    n_params = nnm.count_params(build_model(cfg).specs())
+
+    # --- 1. full config, rolled: sharding proof + memory analysis ---------
+    compiled_full, t_lower, t_compile = _compile_step(cfg, shape, mesh, rules,
+                                                      unroll=False)
+    _, _, _, mem = _analyze(compiled_full)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
+        "chips": chips, "n_params": n_params, "mode": shape.mode,
+        "full_compile_s": t_compile, "full_lower_s": t_lower,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+    arg_b = record["memory"]["argument_bytes"] or 0
+    tmp_b = record["memory"]["temp_bytes"] or 0
+    record["hbm_per_chip_gib"] = (arg_b + tmp_b) / 1024**3
+    record["fits_hbm"] = record["hbm_per_chip_gib"] < HW["hbm_bytes"] / 1024**3
+    del compiled_full
+
+    if multi_pod:
+        # multi-pod pass = compile-success proof only
+        return record
+
+    # --- 2. depth variants, unrolled: per-iteration cost measurement ------
+    meas = []
+    for it in VARIANT_ITERS:
+        vcfg = cfg.depth_variant(it)
+        comp, _, tc = _compile_step(vcfg, shape, mesh, rules, unroll=True)
+        f, b, coll, _ = _analyze(comp)
+        meas.append({"iters": vcfg.scan_iters(), "flops": f, "bytes": b,
+                     "coll": coll.per_chip_bytes,
+                     "coll_by_kind": coll.by_kind, "compile_s": tc})
+        del comp
+    (m1, m2) = meas
+    s1, s2 = m1["iters"], m2["iters"]
+    s_full = cfg.scan_iters()
+
+    def extrap(key):
+        slope = (m2[key] - m1[key]) / (s2 - s1)
+        return m1[key] + (s_full - s1) * slope, slope
+
+    flops, flops_slope = extrap("flops")
+    bytes_acc, _ = extrap("bytes")
+    coll_bytes, _ = extrap("coll")
+    coll_kinds = {}
+    for k in set(m1["coll_by_kind"]) | set(m2["coll_by_kind"]):
+        a = m1["coll_by_kind"].get(k, 0.0)
+        b2 = m2["coll_by_kind"].get(k, 0.0)
+        coll_kinds[k] = a + (s_full - s1) * (b2 - a) / (s2 - s1)
+
+    coll = CollectiveStats(per_chip_bytes=coll_bytes, by_kind=coll_kinds)
+    terms = roofline_terms(flops, bytes_acc, coll, chips, HW)
+    mflops = model_flops_for(cfg, shape)
+    record.update({
+        "flops": flops, "bytes_accessed": bytes_acc,
+        "per_iter_flops": flops_slope,
+        "collectives": coll.to_dict(),
+        "variant_measurements": meas,
+        "terms": terms,
+        "model_flops": mflops,
+        "useful_flops_frac": (mflops / (flops * chips)) if flops else None,
+    })
+    return record
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=False):
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached] {arch} {shape_name} {mesh_name}", flush=True)
+            return rec
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+    except Exception as e:  # record failures; they are bugs to fix
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" hbm={rec['hbm_per_chip_gib']:.2f}GiB "
+                 f"compile={rec['full_compile_s']:.0f}s")
+        if "terms" in rec:
+            extra += f" dom={rec['terms']['dominant']}"
+    print(f"[{status}] {arch} {shape_name} {mesh_name}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               skip_existing=args.skip_existing)
+                failures += rec["status"] == "error"
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

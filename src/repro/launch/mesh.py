@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Target fleet: TPU v5e pods of 256 chips arranged (16, 16); the multi-pod
+configuration stacks 2 pods = 512 chips on a leading "pod" axis (data
+parallelism over DCI, with gradient compression available for the cross-pod
+reduction). Defined as FUNCTIONS so importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(num_devices: Optional[int] = None, model_axis: int = None):
+    """Small-scale mesh for tests/examples on host platforms."""
+    n = num_devices or len(jax.devices())
+    m = model_axis or (2 if n % 2 == 0 and n > 1 else 1)
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e).
+HW = {
+    "name": "tpu_v5e",
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link (~per chip per direction)
+    "hbm_bytes": 16 * 1024**3,     # 16 GiB per chip
+    "dci_bw": 6.25e9,              # cross-pod per chip (assumed 50 Gbit/s)
+}

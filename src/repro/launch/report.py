@@ -1,0 +1,73 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(d):
+    recs = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+
+    print("| arch | shape | status | compute ms | memory ms | coll ms | "
+          "dominant | useful FLOPs | HBM GiB/chip | fits |")
+    print("|---|---|---|---:|---:|---:|---|---:|---:|---|")
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        if r.get("mesh") != args.mesh:
+            continue
+        if r["status"] == "skipped":
+            n_skip += 1
+            print(f"| {r['arch']} | {r['shape']} | skipped "
+                  f"(sub-quadratic n/a) | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            print(f"| {r['arch']} | {r['shape']} | ERROR: "
+                  f"{r.get('error','')[:60]} | | | | | | | |")
+            continue
+        n_ok += 1
+        t = r.get("terms")
+        if not t:
+            continue
+        u = r.get("useful_flops_frac")
+        print(f"| {r['arch']} | {r['shape']} | ok | {fmt_ms(t['compute_s'])} "
+              f"| {fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} "
+              f"| {t['dominant']} | {u:.2f} | {r['hbm_per_chip_gib']:.1f} "
+              f"| {'Y' if r['fits_hbm'] else 'N'} |")
+    print(f"\nok={n_ok} skipped={n_skip} errors={n_err}")
+
+    # multi-pod compile proof summary
+    print("\nMulti-pod (2x16x16) compile proof:")
+    ok = [r for r in recs if r.get("mesh") == "multi" and r["status"] == "ok"]
+    err = [r for r in recs if r.get("mesh") == "multi"
+           and r["status"] == "error"]
+    skip = [r for r in recs if r.get("mesh") == "multi"
+            and r["status"] == "skipped"]
+    print(f"  compiled: {len(ok)}  skipped: {len(skip)}  errors: {len(err)}")
+    for r in err:
+        print(f"  ERROR {r['arch']} {r['shape']}: {r.get('error','')[:100]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Roofline-term extraction from compiled (SPMD-partitioned) executables.
+
+Three terms, each in seconds-per-step on the target hardware:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes  / (chips * HBM_bw)
+    collective = per-chip collective bytes / link_bw
+
+``cost_analysis`` supplies FLOPs / bytes-accessed for the whole program
+(all partitions); collective bytes are NOT in cost_analysis, so we parse
+the optimized HLO text: after SPMD partitioning every op shape is
+*per-partition*, so summing collective result shapes (x an op-specific ring
+factor) directly estimates per-chip link traffic.
+
+Ring factors (N = replica-group size):
+    all-reduce:         2 * (N-1)/N * bytes     (reduce-scatter + all-gather)
+    all-gather:         (N-1)/N * result_bytes
+    reduce-scatter:     (N-1)/N * input_bytes  ~= (N-1) * result_bytes
+    all-to-all:         (N-1)/N * bytes
+    collective-permute: bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# op start: `%name = <shape or tuple> <op-name>(`  (optionally `-start`)
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string like 'bf16[8,128]{1,0}' or a tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_chip_bytes: float = 0.0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+    f32_bytes: float = 0.0     # moved bytes whose payload dtype is f32
+
+    @property
+    def bf16_corrected(self) -> float:
+        """TPU-intent estimate: XLA's *CPU* float-normalization pass
+        upcasts every bf16 dot/elementwise to f32, so collectives adjacent
+        to bf16 compute are measured at 2x their TPU size. For bf16-compute
+        models the corrected per-chip bytes halve the f32 share."""
+        return self.per_chip_bytes - 0.5 * self.f32_bytes
+
+    def to_dict(self):
+        return {"per_chip_bytes": self.per_chip_bytes,
+                "by_kind": self.by_kind, "count": self.count,
+                "f32_bytes": self.f32_bytes,
+                "bf16_corrected": self.bf16_corrected}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if ".remat" in line and m.group(2) not in line:  # defensive
+            continue
+        shape_str, kind, is_start = m.group(1), m.group(2), m.group(3)
+        # "-done" ops repeat the shape of their "-start"; only count starts
+        # and plain (non-async) ops.
+        if f"{kind}-done" in line:
+            continue
+        n = _group_size(line)
+        b = _shape_bytes(shape_str)
+        if kind == "all-reduce":
+            moved = 2.0 * (n - 1) / n * b
+        elif kind == "all-gather":
+            moved = (n - 1) / n * b
+        elif kind == "reduce-scatter":
+            moved = float(n - 1) * b          # input ~= result * N
+        elif kind == "all-to-all":
+            moved = (n - 1) / n * b
+        else:                                  # collective-permute
+            moved = float(b)
+        stats.per_chip_bytes += moved
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + moved
+        stats.count += 1
+        # dtype split for the CPU-float-normalization correction
+        f32_b = 0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            if dt != "f32":
+                continue
+            n = 1
+            for d_ in (dims.split(",") if dims else []):
+                n *= int(d_)
+            f32_b += n * 4
+        if b > 0:
+            stats.f32_bytes += moved * (f32_b / b)
+    return stats
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll: CollectiveStats, num_chips: int, hw: Dict,
+                   cross_pod_bytes: float = 0.0) -> Dict[str, float]:
+    """Terms in seconds-per-step.
+
+    Empirically (validated against 6*N*D accounting on stablelm-3b),
+    ``cost_analysis`` on the SPMD-partitioned module reports *per-partition*
+    FLOPs/bytes, i.e. already HLO_FLOPs/chips — so the per-chip time is
+    flops / peak directly. Collective bytes from the HLO census are also
+    per-chip (post-partitioning shapes)."""
+    compute = flops / hw["peak_flops_bf16"]
+    memory = bytes_accessed / hw["hbm_bw"]
+    collective_raw = coll.per_chip_bytes / hw["ici_bw"]
+    collective = coll.bf16_corrected / hw["ici_bw"]
+    if cross_pod_bytes:
+        collective += cross_pod_bytes / hw["dci_bw"]
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    total = max(compute, memory, collective)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "collective_s_raw_f32": collective_raw,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction_of_compute": compute / total if total > 0 else 0.0,
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train;
+    2*N*D forward-only for prefill; 2*N_active per token for decode."""
+    from repro.nn import module as nnm
+    from repro.nn.transformer import build_model
+
+    model = build_model(cfg)
+    n_params = nnm.count_params(model.specs())
+    n_active = n_params
+    if cfg.moe is not None:
+        # subtract non-routed share of expert params
+        m = cfg.moe
+        moe_layers = cfg.num_layers - m.first_k_dense
+        expert_params = moe_layers * m.num_experts * 3 * cfg.d_model * m.expert_ff
+        active_expert = moe_layers * m.top_k * 3 * cfg.d_model * m.expert_ff
+        n_active = n_params - expert_params + active_expert
+    tokens = shape.global_batch * (shape.seq_len if shape.mode == "train"
+                                   else (shape.seq_len if shape.mode ==
+                                         "prefill" else 1))
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def summarize(record: Dict) -> str:
+    t = record["terms"]
+    return (f"{record['arch']:24s} {record['shape']:12s} {record['mesh']:6s} "
+            f"compute={t['compute_s']*1e3:9.3f}ms memory={t['memory_s']*1e3:9.3f}ms "
+            f"coll={t['collective_s']*1e3:9.3f}ms dom={t['dominant']:10s} "
+            f"useful={record.get('useful_flops_frac', float('nan')):.3f}")

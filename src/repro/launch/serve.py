@@ -1,0 +1,59 @@
+"""Serving launcher: batched continuous-batching decode of an LM config.
+
+``python -m repro.launch.serve --arch stablelm-3b --reduced --requests 8``
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.nn import module as nnm
+from repro.nn.transformer import build_model
+from repro.runtime.server import Request, Server
+
+log = logging.getLogger("repro.launch.serve")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32")
+    if cfg.enc_dec:
+        raise SystemExit("enc-dec serving demo: see examples/ for whisper")
+    model = build_model(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(0))
+    srv = Server(model, params, num_slots=args.slots, max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for uid in range(args.requests):
+        srv.submit(Request(
+            uid=uid, prompt=rng.integers(1, cfg.vocab_size, rng.integers(4, 12)),
+            max_new_tokens=args.max_new, temperature=args.temperature))
+    done = srv.run_until_drained()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.generated) for r in done.values())
+    log.info("served %d requests, %d tokens in %.2fs (%.1f tok/s, %d ticks)",
+             len(done), total_tokens, dt, total_tokens / dt, srv.ticks)
+    for uid in sorted(done):
+        log.info("req %d -> %s", uid, done[uid].generated)
+
+
+if __name__ == "__main__":
+    main()

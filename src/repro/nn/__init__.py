@@ -1,0 +1,13 @@
+"""Neural-network substrate: param system, layers, blocks, full models."""
+from repro.nn import (agent_sim, attention, blocks, layers, mlp, module, moe,
+                      ssm, transformer)
+from repro.nn.module import (abstract_params, cast_params, count_params,
+                             init_params, param_axes, ParamSpec, stack_specs)
+from repro.nn.transformer import build_model, EncDecLM, TransformerLM
+
+__all__ = [
+    "agent_sim", "attention", "blocks", "layers", "mlp", "module", "moe",
+    "ssm", "transformer", "abstract_params", "cast_params", "count_params",
+    "init_params", "param_axes", "ParamSpec", "stack_specs", "build_model",
+    "EncDecLM", "TransformerLM",
+]

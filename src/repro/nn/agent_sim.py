@@ -1,0 +1,226 @@
+"""Agent-simulation model (paper Sec. IV-B): next-action prediction over
+tokenized traffic scenes with SE(2)-relative attention.
+
+Scene tokenization (mirrors the paper's setup): each map element and each
+(agent, timestep) pair is one token with an associated SE(2) pose. Tokens
+are ordered [map..., agents@t0, agents@t1, ...]; attention is block-causal
+over *times* (map tokens have time 0, agents at step t have time t+1, and
+tokens of the same step attend to each other bidirectionally). The model
+predicts a categorical distribution over a discrete (acceleration x yaw
+rate) action grid for every agent token.
+
+The relative attention mechanism is pluggable — the four rows of the paper's
+Table I:
+
+  * ``absolute``     — learned Fourier-feature pose embedding added to token
+    features, standard SDPA.
+  * ``rope2d``       — translation-invariant only (Sec. II-D).
+  * ``se2_repr``     — homogeneous-matrix SE(2) representation (Sec. II-E).
+  * ``se2_fourier``  — the paper's contribution (Sec. III).
+
+Positions are downscaled by ``pos_scale`` so magnitudes stay within the
+Fourier basis budget (paper: <= 4 with F = 18).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import se2
+from repro.core.encodings import GroupEncoding, make_encoding
+from repro.distributed.sharding import logical_constraint
+from repro.kernels import ops as kops
+from repro.nn.attention import _merge_heads, _split_heads
+from repro.nn.layers import Dense, RMSNorm
+from repro.nn.mlp import GatedMLP
+from repro.nn.module import ParamSpec, stack_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentSimConfig:
+    d_model: int = 256
+    num_layers: int = 4
+    num_heads: int = 8
+    head_dim: int = 24            # divisible by 6/4/3/2: works for every enc
+    d_ff: int = 1024
+    num_actions: int = 63         # 7 accel bins x 9 yaw-rate bins
+    agent_feat_dim: int = 8
+    map_feat_dim: int = 8
+    encoding: str = "se2_fourier"
+    fourier_terms: int = 12
+    min_scale: float = 0.25
+    max_scale: float = 1.0
+    pos_scale: float = 0.05       # world meters -> encoder units (<= 4)
+    attn_impl: str = "ref"        # scenes are small; ref is fine on CPU
+    dtype: str = "float32"
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+
+def build_sim_encoding(cfg: AgentSimConfig) -> Optional[GroupEncoding]:
+    if cfg.encoding == "absolute":
+        return None
+    kwargs: Dict[str, Any] = {}
+    if cfg.encoding == "se2_fourier":
+        kwargs = dict(num_terms=cfg.fourier_terms, min_scale=cfg.min_scale,
+                      max_scale=cfg.max_scale)
+    elif cfg.encoding == "se2_repr":
+        kwargs = dict(min_scale=cfg.min_scale, max_scale=cfg.max_scale)
+    elif cfg.encoding == "rope2d":
+        kwargs = dict(max_freq=cfg.max_scale, base=100.0)
+    return make_encoding(cfg.encoding, cfg.head_dim, **kwargs)
+
+
+class SimAttention:
+    """Relative attention over scene tokens (Alg. 2 around the SDPA kernel)."""
+
+    def __init__(self, cfg: AgentSimConfig):
+        self.cfg = cfg
+        self.enc = build_sim_encoding(cfg)
+        d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+        self.projs = {
+            "q": Dense((d,), (h, hd), ("embed",), ("heads", "head_dim")),
+            "k": Dense((d,), (h, hd), ("embed",), ("heads", "head_dim")),
+            "v": Dense((d,), (h, hd), ("embed",), ("heads", "head_dim")),
+            "o": Dense((h, hd), (d,), ("heads", "head_dim"), ("embed",)),
+        }
+
+    def specs(self):
+        return {k: p.specs() for k, p in self.projs.items()}
+
+    def __call__(self, params, x, pose, times, segment_ids):
+        cfg = self.cfg
+        h, hd = cfg.num_heads, cfg.head_dim
+        q = _split_heads(self.projs["q"](params["q"], x), h, hd)
+        k = _split_heads(self.projs["k"](params["k"], x), h, hd)
+        v = _split_heads(self.projs["v"](params["v"], x), h, hd)
+        scale = 1.0 / float(hd) ** 0.5
+        if self.enc is not None:
+            p4 = pose[:, None]                       # (B, 1, S, 3)
+            if self.enc.pose_dim == 2:
+                p4 = p4[..., :2]
+            q = self.enc.transform_q(q, p4)
+            k = self.enc.transform_k(k, p4)
+            if self.enc.transforms_values:
+                v = self.enc.transform_v(v, p4)
+        out = kops.attention(q, k, v, impl=cfg.attn_impl, scale=scale,
+                             q_times=times, k_times=times,
+                             q_segment_ids=segment_ids,
+                             k_segment_ids=segment_ids)
+        if self.enc is not None and self.enc.transforms_values:
+            out = self.enc.untransform_out(out, pose[:, None])
+        return self.projs["o"](params["o"], _merge_heads(out))
+
+
+class AgentSimModel:
+    """Scene transformer -> per-(agent, t) action logits."""
+
+    def __init__(self, cfg: AgentSimConfig):
+        self.cfg = cfg
+        d = cfg.d_model
+        self.map_enc = Dense((cfg.map_feat_dim,), (d,), (None,), ("embed",))
+        self.agent_enc = Dense((cfg.agent_feat_dim,), (d,), (None,), ("embed",))
+        self.attn = SimAttention(cfg)
+        self.mlp = GatedMLP(d, cfg.d_ff)
+        self.norm1 = RMSNorm(d)
+        self.norm2 = RMSNorm(d)
+        self.final_norm = RMSNorm(d)
+        self.head = Dense((d,), (cfg.num_actions,), ("embed",), (None,))
+        # learned Fourier pose embedding for the "absolute" baseline
+        self.pose_freqs = 16
+
+    def specs(self):
+        cfg = self.cfg
+        block = {"attn": self.attn.specs(), "mlp": self.mlp.specs(),
+                 "norm1": self.norm1.specs(), "norm2": self.norm2.specs()}
+        s = {
+            "map_enc": self.map_enc.specs(),
+            "agent_enc": self.agent_enc.specs(),
+            "blocks": stack_specs(block, cfg.num_layers),
+            "final_norm": self.final_norm.specs(),
+            "head": self.head.specs(),
+        }
+        if cfg.encoding == "absolute":
+            s["pose_proj"] = Dense((3 * self.pose_freqs,), (cfg.d_model,),
+                                   ("basis",), ("embed",)).specs()
+        return s
+
+    def _pose_embedding(self, params, pose):
+        """Fourier features of (x, y, theta) -> d_model (absolute baseline)."""
+        freqs = jnp.asarray(2.0 ** np.arange(self.pose_freqs // 2),
+                            jnp.float32)
+        scaled = jnp.concatenate(
+            [pose[..., 0:1] * self.cfg.pos_scale,
+             pose[..., 1:2] * self.cfg.pos_scale, pose[..., 2:3]], -1)
+        ang = scaled[..., None] * freqs                  # (..., 3, PF/2)
+        feats = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        feats = feats.reshape(*pose.shape[:-1], 3 * self.pose_freqs)
+        return Dense((3 * self.pose_freqs,), (self.cfg.d_model,), ("basis",),
+                     ("embed",))(params["pose_proj"], feats)
+
+    def tokenize(self, batch):
+        """Assemble scene tokens.
+
+        batch: dict with
+          map_feats (B, M, Fm), map_pose (B, M, 3), map_valid (B, M) bool
+          agent_feats (B, T, A, Fa), agent_pose (B, T, A, 3),
+          agent_valid (B, T, A) bool
+        Returns (feats, pose, times, segment_ids) with S = M + T*A.
+        """
+        b, m, _ = batch["map_feats"].shape
+        _, t, a, _ = batch["agent_feats"].shape
+        pose = jnp.concatenate(
+            [batch["map_pose"],
+             batch["agent_pose"].reshape(b, t * a, 3)], axis=1)
+        times = jnp.concatenate(
+            [jnp.zeros((b, m), jnp.int32),
+             jnp.broadcast_to(1 + jnp.arange(t, dtype=jnp.int32)[None, :, None],
+                              (b, t, a)).reshape(b, t * a)], axis=1)
+        valid = jnp.concatenate(
+            [batch["map_valid"],
+             batch["agent_valid"].reshape(b, t * a)], axis=1)
+        segment_ids = jnp.where(valid, 0, -1).astype(jnp.int32)
+        return pose, times, segment_ids
+
+    def __call__(self, params, batch):
+        """Returns logits (B, T, A, num_actions) and aux (zeros)."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, m, _ = batch["map_feats"].shape
+        _, t, a, _ = batch["agent_feats"].shape
+        pose, times, segment_ids = self.tokenize(batch)
+        mtok = self.map_enc(params["map_enc"], batch["map_feats"].astype(dt))
+        atok = self.agent_enc(params["agent_enc"],
+                              batch["agent_feats"].astype(dt))
+        x = jnp.concatenate([mtok, atok.reshape(b, t * a, -1)], axis=1)
+        if cfg.encoding == "absolute":
+            x = x + self._pose_embedding(params, pose).astype(dt)
+        enc_pose = pose.astype(jnp.float32) * jnp.asarray(
+            [cfg.pos_scale, cfg.pos_scale, 1.0], jnp.float32)
+
+        def body(x, lp):
+            h = self.norm1(lp["norm1"], x)
+            x = x + self.attn(lp["attn"], h, enc_pose, times, segment_ids)
+            h = self.norm2(lp["norm2"], x)
+            x = x + self.mlp(lp["mlp"], h)
+            return x, 0
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        x = self.final_norm(params["final_norm"], x)
+        logits = self.head(params["head"], x[:, m:])
+        return logits.reshape(b, t, a, cfg.num_actions), jnp.zeros(
+            (), jnp.float32)
+
+
+def action_nll(logits, actions, valid):
+    """Mean NLL of ground-truth actions over valid agent steps."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+    w = valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,312 @@
+"""Attention layers: GQA/MQA/MHA with group-relative encodings, MLA, caches.
+
+Two families:
+
+  * :class:`Attention` — standard multi-head attention with grouped KV heads.
+    Position information goes through a pluggable ``GroupEncoding`` (the
+    paper's abstraction): ``rope1d`` for LMs, ``rope2d`` / ``se2_repr`` /
+    ``se2_fourier`` for spatial models, ``absolute``/None for models that add
+    position embeddings upstream (granite, whisper). Supports causal masks,
+    sliding windows (gemma2 local layers, hymba), logit softcap (gemma2),
+    partial-rotary (stablelm), and a decode KV cache.
+
+  * :class:`MLAttention` — DeepSeek-style Multi-head Latent Attention:
+    compressed KV latent + decoupled RoPE key. The decode path uses the
+    *absorbed* formulation (queries projected into latent space), so the KV
+    cache stays at ``kv_lora + rope_dim`` per token — the feature that makes
+    deepseek-v2/kimi-k2 long-context serving cheap.
+
+Shapes: activations ``(B, S, d_model)``; caches ``(B, Hkv, Smax, D)`` plus an
+integer cursor handled by the caller (all cache slots are preallocated so
+serve steps are shape-stable under jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encodings import GroupEncoding, Rope1D
+from repro.distributed.sharding import logical_constraint
+from repro.kernels import ops as kops
+from repro.nn.layers import Dense
+from repro.nn.module import ParamSpec
+
+
+def _split_heads(x, num_heads, head_dim):
+    if x.ndim == 4:            # DenseGeneral already produced (B, S, H, D)
+        return x.transpose(0, 2, 1, 3)
+    b, s, _ = x.shape
+    return x.reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    """(B, H, S, D) -> (B, S, H, D); the output projection is a
+    DenseGeneral contracting both head axes."""
+    return x.transpose(0, 2, 1, 3)
+
+
+def _apply_encoding(enc, transform, x, pose):
+    """Apply an encoding transform to (B, H, S, D) given pose (B, S, P)."""
+    return transform(x, pose[:, None, :, :])
+
+
+def _cache_update(cache, new, index):
+    """Write ``new`` (B, H, S, D) into ``cache`` at position ``index`` along
+    the length axis. ``index`` may be a scalar (synchronized decode) or a
+    per-row (B,) vector (continuous batching: per-slot cursors)."""
+    new = new.astype(cache.dtype)
+    if getattr(index, "ndim", 0) == 1:
+        assert new.shape[2] == 1, "vector cursors require single-token steps"
+        b = cache.shape[0]
+        return cache.at[jnp.arange(b), :, index, :].set(new[:, :, 0, :])
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, index, axis=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    d_model: int
+    num_q_heads: int
+    num_kv_heads: int
+    head_dim: int
+    encoding: Optional[GroupEncoding] = None
+    rope_fraction: float = 1.0          # stablelm partial rotary
+    causal: bool = True
+    window: Optional[int] = None
+    softcap: Optional[float] = None
+    query_scale: Optional[float] = None  # gemma2 query_pre_attn_scalar
+    use_bias: bool = False
+    out_dim: Optional[int] = None
+    impl: str = "chunked"
+
+    def __post_init__(self):
+        assert self.num_q_heads % self.num_kv_heads == 0
+
+    @property
+    def _odim(self):
+        return self.out_dim or self.d_model
+
+    def _projs(self):
+        h, hk, hd, d = (self.num_q_heads, self.num_kv_heads, self.head_dim,
+                        self.d_model)
+        return {
+            "q": Dense((d,), (h, hd), ("embed",), ("heads", "head_dim"),
+                       use_bias=self.use_bias),
+            "k": Dense((d,), (hk, hd), ("embed",), ("kv_heads", "head_dim"),
+                       use_bias=self.use_bias),
+            "v": Dense((d,), (hk, hd), ("embed",), ("kv_heads", "head_dim"),
+                       use_bias=self.use_bias),
+            "o": Dense((h, hd), (self._odim,), ("heads", "head_dim"),
+                       ("embed",), use_bias=self.use_bias),
+        }
+
+    def specs(self):
+        return {k: l.specs() for k, l in self._projs().items()}
+
+    @property
+    def _rot_dim(self):
+        if self.encoding is None:
+            return 0
+        rd = int(self.head_dim * self.rope_fraction)
+        return rd - rd % 2
+
+    def _encode(self, q, k, pose):
+        """Apply the group encoding to (possibly a fraction of) q/k."""
+        enc = self.encoding
+        if enc is None or pose is None:
+            return q, k
+        rd = self._rot_dim
+        if rd == self.head_dim:
+            q = _apply_encoding(enc, enc.transform_q, q, pose)
+            k = _apply_encoding(enc, enc.transform_k, k, pose)
+            return q, k
+        qr = _apply_encoding(enc, enc.transform_q, q[..., :rd], pose)
+        kr = _apply_encoding(enc, enc.transform_k, k[..., :rd], pose)
+        return (jnp.concatenate([qr, q[..., rd:]], -1),
+                jnp.concatenate([kr, k[..., rd:]], -1))
+
+    def _scale(self):
+        if self.query_scale is not None:
+            return self.query_scale ** -0.5
+        return 1.0 / float(self.head_dim) ** 0.5
+
+    def __call__(self, params, x, pose=None, *, kv=None, segment_ids=None,
+                 cache=None, cache_index=None, impl=None):
+        """Returns (out, new_cache). ``pose``: (B, S, pose_dim) or (B, S)
+        integer positions for rope1d. ``kv``: cross-attention source (keys/
+        values projected from it instead of x). With a cache, x is the
+        current chunk (usually S=1 decode) written at ``cache_index``."""
+        impl = impl or self.impl
+        projs = self._projs()
+        kv_src = x if kv is None else kv
+        if pose is not None and pose.ndim == 2:
+            pose = pose[..., None].astype(jnp.float32)
+        q = _split_heads(projs["q"](params["q"], x), self.num_q_heads,
+                         self.head_dim)
+        k = _split_heads(projs["k"](params["k"], kv_src), self.num_kv_heads,
+                         self.head_dim)
+        v = _split_heads(projs["v"](params["v"], kv_src), self.num_kv_heads,
+                         self.head_dim)
+        q = logical_constraint(q, "act_batch", "act_heads", "act_seq", None)
+        k = logical_constraint(k, "act_batch", "act_kv", "act_seq", None)
+        q, k = self._encode(q, k, pose)
+        if (self.encoding is not None and self.encoding.transforms_values
+                and pose is not None):
+            v = _apply_encoding(self.encoding, self.encoding.transform_v, v,
+                                pose)
+        scale = self._scale()
+
+        new_cache = None
+        if cache is not None:
+            ck, cv = cache["k"], cache["v"]
+            ck = _cache_update(ck, k, cache_index)
+            cv = _cache_update(cv, v, cache_index)
+            new_cache = {"k": ck, "v": cv}
+            out = kops.attention(
+                q, ck, cv, impl="chunked" if impl == "flash" else impl,
+                causal=self.causal, window=self.window, softcap=self.softcap,
+                scale=scale, q_offset=cache_index)
+        else:
+            out = kops.attention(
+                q, k, v, impl=impl, causal=self.causal, window=self.window,
+                softcap=self.softcap, scale=scale,
+                q_segment_ids=segment_ids, k_segment_ids=segment_ids)
+        if (self.encoding is not None and self.encoding.transforms_values
+                and pose is not None):
+            out = _apply_encoding(self.encoding, self.encoding.untransform_out,
+                                  out, pose)
+        out = logical_constraint(out, "act_batch", "act_heads", "act_seq", None)
+        y = projs["o"](params["o"], _merge_heads(out))
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed"), new_cache
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        hd = self.head_dim
+        rd = self._rot_dim
+        # cache stores encoded keys; for dim-preserving encodings hd is right
+        if self.encoding is not None and self.encoding.transforms_values:
+            raise NotImplementedError(
+                "KV cache with value-transforming encodings")
+        return {
+            "k": jnp.zeros((batch, self.num_kv_heads, max_len, hd), dtype),
+            "v": jnp.zeros((batch, self.num_kv_heads, max_len, hd), dtype),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAttention:
+    """Multi-head Latent Attention (deepseek-v2 family)."""
+
+    d_model: int
+    num_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    q_lora_rank: Optional[int] = None
+    rope_base: float = 10000.0
+    causal: bool = True
+    impl: str = "chunked"
+
+    @property
+    def qk_dim(self):
+        return self.qk_nope_dim + self.qk_rope_dim
+
+    def _rope(self):
+        return Rope1D(head_dim=self.qk_rope_dim, base=self.rope_base)
+
+    def _projs(self):
+        d, h = self.d_model, self.num_heads
+        dn, dr, dv, r = (self.qk_nope_dim, self.qk_rope_dim, self.v_head_dim,
+                         self.kv_lora_rank)
+        p = {}
+        if self.q_lora_rank:
+            p["q_down"] = Dense((d,), (self.q_lora_rank,), ("embed",),
+                                ("kv_lora",))
+            p["q_up"] = Dense((self.q_lora_rank,), (h, dn + dr), ("kv_lora",),
+                              ("heads", "head_dim"))
+        else:
+            p["q"] = Dense((d,), (h, dn + dr), ("embed",),
+                           ("heads", "head_dim"))
+        p["kv_down"] = Dense((d,), (r,), ("embed",), ("kv_lora",))
+        p["k_rope"] = Dense((d,), (dr,), ("embed",), ("head_dim",))
+        p["k_up"] = Dense((r,), (h, dn), ("kv_lora",), ("heads", "head_dim"))
+        p["v_up"] = Dense((r,), (h, dv), ("kv_lora",), ("heads", "head_dim"))
+        p["o"] = Dense((h, dv), (d,), ("heads", "head_dim"), ("embed",))
+        return p
+
+    def specs(self):
+        s = {k: l.specs() for k, l in self._projs().items()}
+        from repro.nn.layers import RMSNorm
+        s["kv_norm"] = RMSNorm(self.kv_lora_rank).specs()
+        return s
+
+    def _queries(self, params, projs, x):
+        b, s, _ = x.shape
+        if self.q_lora_rank:
+            ql = projs["q_down"](params["q_down"], x)
+            q = projs["q_up"](params["q_up"], ql)
+        else:
+            q = projs["q"](params["q"], x)
+        return q.transpose(0, 2, 1, 3)  # (B, H, S, dn+dr)
+
+    def _latent(self, params, projs, x):
+        from repro.nn.layers import RMSNorm
+        ckv = projs["kv_down"](params["kv_down"], x)          # (B, S, r)
+        ckv = RMSNorm(self.kv_lora_rank)(params["kv_norm"], ckv)
+        kr = projs["k_rope"](params["k_rope"], x)             # (B, S, dr)
+        return ckv, kr
+
+    def __call__(self, params, x, pose=None, *, segment_ids=None, cache=None,
+                 cache_index=None, impl=None):
+        impl = impl or self.impl
+        projs = self._projs()
+        rope = self._rope()
+        b, s, _ = x.shape
+        if pose is None:
+            pose = jnp.arange(s, dtype=jnp.float32)[None, :].repeat(b, 0)
+        if pose.ndim == 2:
+            pose = pose[..., None].astype(jnp.float32)
+        q = self._queries(params, projs, x)
+        qn, qr = q[..., :self.qk_nope_dim], q[..., self.qk_nope_dim:]
+        qr = rope.transform_q(qr, pose[:, None, :, :])
+        ckv, kr = self._latent(params, projs, x)
+        kr = rope.transform_k(kr[:, None], pose[:, None, :, :])  # (B,1,S,dr)
+
+        if cache is not None:
+            # Absorbed decode: score = qn W_uk . ckv + qr . kr over the cache.
+            cc = _cache_update(cache["ckv"], ckv[:, None], cache_index)
+            ckr = _cache_update(cache["kr"], kr, cache_index)
+            new_cache = {"ckv": cc, "kr": ckr}
+            wk = params["k_up"]["kernel"].astype(x.dtype)   # (r, H, dn)
+            q_lat = jnp.einsum("bhsd,rhd->bhsr", qn, wk)    # (B,H,S,r)
+            q_full = jnp.concatenate([q_lat, qr], -1)       # (B,H,S,r+dr)
+            k_full = jnp.concatenate([cc, ckr], -1)         # (B,1,Smax,r+dr)
+            scale = 1.0 / float(self.qk_dim) ** 0.5
+            o_lat = kops.attention(q_full, k_full, cc, impl="chunked",
+                                   causal=self.causal, scale=scale,
+                                   q_offset=cache_index)    # (B,H,S,r)
+            wv = params["v_up"]["kernel"].astype(x.dtype)   # (r, H, dv)
+            out = jnp.einsum("bhsr,rhd->bhsd", o_lat, wv)
+            y = projs["o"](params["o"], _merge_heads(out))
+            return y, new_cache
+
+        kn = projs["k_up"](params["k_up"], ckv).transpose(0, 2, 1, 3)
+        v = projs["v_up"](params["v_up"], ckv).transpose(0, 2, 1, 3)
+        k = jnp.concatenate(
+            [kn, jnp.broadcast_to(kr, kn.shape[:3] + (self.qk_rope_dim,))], -1)
+        qf = jnp.concatenate([qn, qr], -1)
+        qf = logical_constraint(qf, "act_batch", "act_heads", "act_seq", None)
+        scale = 1.0 / float(self.qk_dim) ** 0.5
+        out = kops.attention(qf, k, v, impl=impl, causal=self.causal,
+                             scale=scale, q_segment_ids=segment_ids,
+                             k_segment_ids=segment_ids)
+        y = projs["o"](params["o"], _merge_heads(out))
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed"), None
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return {
+            "ckv": jnp.zeros((batch, 1, max_len, self.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, 1, max_len, self.qk_rope_dim), dtype),
+        }

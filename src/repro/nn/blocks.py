@@ -1,0 +1,135 @@
+"""Transformer blocks: composable residual layers covering all 10 families.
+
+A :class:`Block` bundles an optional attention mixer, an optional SSM mixer
+(parallel or exclusive), and a channel mixer (MLP / MoE / RWKV channel-mix),
+with pre- (and optionally post-) norms. One template is instantiated per
+distinct layer type and scanned over the layer axis by the model wrapper.
+
+``apply`` signature is uniform across families so the scan body never
+branches: (params, x, pose, segment_ids, cache, cache_index) ->
+(x, aux_loss, new_cache). Caches are dicts with optional "attn"/"ssm" parts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import Attention, MLAttention
+from repro.nn.layers import LayerNorm, RMSNorm
+from repro.nn.mlp import MLP, GatedMLP, RWKVChannelMix
+from repro.nn.moe import MoE
+from repro.nn.ssm import MambaMixer, RWKV6TimeMix
+
+Mixer = Union[Attention, MLAttention, None]
+ChannelMixer = Union[GatedMLP, MLP, MoE, RWKVChannelMix]
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    d_model: int
+    attention: Mixer = None
+    ssm: Optional[Union[MambaMixer, RWKV6TimeMix]] = None
+    mlp: Optional[ChannelMixer] = None
+    norm: str = "rms"                 # "rms" | "layer" | "rms_offset"
+    post_norms: bool = False          # gemma2 post-sublayer norms
+    parallel_ssm: bool = False        # hymba: attn + ssm fused in parallel
+
+    def _norm(self):
+        if self.norm == "layer":
+            return LayerNorm(self.d_model)
+        if self.norm == "rms_offset":
+            return RMSNorm(self.d_model, weight_offset=1.0)
+        return RMSNorm(self.d_model)
+
+    def specs(self):
+        n = self._norm()
+        s = {}
+        if self.attention is not None or self.ssm is not None:
+            s["norm_mix"] = n.specs()
+        if self.attention is not None:
+            s["attn"] = self.attention.specs()
+        if self.ssm is not None:
+            s["ssm"] = self.ssm.specs()
+        if self.parallel_ssm:
+            # learned per-branch output norms (hymba fuses by averaging)
+            s["attn_out_norm"] = RMSNorm(self.d_model).specs()
+            s["ssm_out_norm"] = RMSNorm(self.d_model).specs()
+        if self.mlp is not None:
+            s["norm_mlp"] = n.specs()
+            s["mlp"] = self.mlp.specs()
+        if self.post_norms:
+            if self.attention is not None:
+                s["post_norm_mix"] = n.specs()
+            if self.mlp is not None:
+                s["post_norm_mlp"] = n.specs()
+        return s
+
+    def __call__(self, params, x, pose=None, segment_ids=None, cache=None,
+                 cache_index=None, impl=None):
+        n = self._norm()
+        aux = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        cache = cache or {}
+
+        if self.attention is not None or self.ssm is not None:
+            h = n(params["norm_mix"], x)
+            parts = []
+            if self.attention is not None:
+                a_out, a_cache = self.attention(
+                    params["attn"], h, pose=pose, segment_ids=segment_ids,
+                    cache=cache.get("attn"), cache_index=cache_index,
+                    impl=impl)
+                if a_cache is not None:
+                    new_cache["attn"] = a_cache
+                parts.append(("attn", a_out))
+            if self.ssm is not None:
+                s_out, s_state = self.ssm(params["ssm"], h,
+                                          state=cache.get("ssm"))
+                if cache.get("ssm") is not None:
+                    new_cache["ssm"] = s_state
+                parts.append(("ssm", s_out))
+            if self.parallel_ssm and len(parts) == 2:
+                a = RMSNorm(self.d_model)(params["attn_out_norm"], parts[0][1])
+                s = RMSNorm(self.d_model)(params["ssm_out_norm"], parts[1][1])
+                mixed = (a + s) * 0.5
+            else:
+                mixed = parts[0][1]
+                for _, p in parts[1:]:
+                    mixed = mixed + p
+            if self.post_norms:
+                mixed = n(params["post_norm_mix"], mixed)
+            x = x + mixed
+
+        if self.mlp is not None:
+            h = n(params["norm_mlp"], x)
+            if isinstance(self.mlp, MoE):
+                m_out, moe_aux = self.mlp(params["mlp"], h)
+                aux = aux + moe_aux
+            elif isinstance(self.mlp, RWKVChannelMix):
+                shift = cache.get("cmix_shift")
+                if shift is not None:
+                    shifted = jnp.concatenate([shift[:, None], h[:, :-1]], 1)
+                    m_out = self.mlp(params["mlp"], h, shifted=shifted)
+                    new_cache["cmix_shift"] = h[:, -1]
+                else:
+                    m_out = self.mlp(params["mlp"], h)
+            else:
+                m_out = self.mlp(params["mlp"], h)
+            if self.post_norms:
+                m_out = n(params["post_norm_mlp"], m_out)
+            x = x + m_out
+
+        return x, aux, (new_cache if new_cache else None)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        c = {}
+        if self.attention is not None:
+            c["attn"] = self.attention.init_cache(batch, max_len, dtype)
+        if self.ssm is not None:
+            c["ssm"] = self.ssm.init_state(batch, dtype)
+        if isinstance(self.mlp, RWKVChannelMix):
+            c["cmix_shift"] = jnp.zeros((batch, self.d_model), dtype)
+        return c

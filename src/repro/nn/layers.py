@@ -1,0 +1,136 @@
+"""Basic layers: projections, norms, embeddings.
+
+Each layer is a frozen dataclass with ``specs()`` (ParamSpec tree) and a pure
+``apply``-style ``__call__``. Logical axis names on every parameter drive the
+sharding layer; nothing here touches a mesh directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.module import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """y = x @ W (+ b); W has shape in_shape + out_shape (DenseGeneral)."""
+
+    in_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    in_axes: Tuple[Optional[str], ...]
+    out_axes: Tuple[Optional[str], ...]
+    use_bias: bool = False
+    init: str = "fan_in"
+
+    def specs(self):
+        s = {"kernel": ParamSpec(self.in_shape + self.out_shape,
+                                 init=self.init,
+                                 axes=self.in_axes + self.out_axes)}
+        if self.use_bias:
+            s["bias"] = ParamSpec(self.out_shape, init="zeros",
+                                  axes=self.out_axes)
+        return s
+
+    def __call__(self, params, x):
+        nin = len(self.in_shape)
+        w = params["kernel"].astype(x.dtype)
+        y = jax.lax.dot_general(
+            x, w,
+            ((tuple(range(x.ndim - nin, x.ndim)), tuple(range(nin))), ((), ())))
+        if self.use_bias:
+            y = y + params["bias"].astype(x.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+    weight_offset: float = 0.0    # gemma stores (w - 1)
+
+    def specs(self):
+        init = "zeros" if self.weight_offset else "ones"
+        return {"scale": ParamSpec((self.dim,), init=init, axes=("embed_no_fsdp",))}
+
+    def __call__(self, params, x):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + self.eps)
+        w = params["scale"].astype(jnp.float32) + self.weight_offset
+        return (y * w).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-5
+
+    def specs(self):
+        return {"scale": ParamSpec((self.dim,), init="ones", axes=("embed_no_fsdp",)),
+                "bias": ParamSpec((self.dim,), init="zeros", axes=("embed_no_fsdp",))}
+
+    def __call__(self, params, x):
+        x32 = x.astype(jnp.float32)
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + self.eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab_size: int
+    dim: int
+    scale_by_sqrt_dim: bool = False   # gemma multiplies embeddings by sqrt(d)
+    one_hot: bool = False             # matmul lookup (refuted: see §Perf)
+
+    def specs(self):
+        return {"embedding": ParamSpec((self.vocab_size, self.dim),
+                                       init="normal", scale=0.02,
+                                       axes=("vocab", "embed"))}
+
+    def __call__(self, params, tokens, dtype=jnp.bfloat16):
+        emb = params["embedding"].astype(dtype)
+        if self.one_hot:
+            # one-hot contraction: the lookup (and, critically, its
+            # transpose — the embedding gradient) stays sharded over the
+            # vocab axis; a gather's scatter-add gradient forces full-table
+            # all-reduces over the model axis instead.
+            oh = jax.nn.one_hot(tokens, self.vocab_size, dtype=dtype)
+            out = jax.lax.dot_general(oh, emb, (((oh.ndim - 1,), (0,)),
+                                                ((), ())))
+        else:
+            out = jnp.take(emb, tokens, axis=0)
+        if self.scale_by_sqrt_dim:
+            out = out * jnp.asarray(np.sqrt(self.dim), dtype)
+        return out
+
+    def attend(self, params, x):
+        """Tied-weights logits: x @ E^T."""
+        emb = params["embedding"].astype(x.dtype)
+        return jax.lax.dot_general(x, emb,
+                                   (((x.ndim - 1,), (1,)), ((), ())))
+
+
+def sinusoidal_positions(length: int, dim: int, max_timescale: float = 10000.0):
+    """Standard transformer sin/cos table (whisper encoder positions)."""
+    positions = np.arange(length)[:, None]
+    dims = np.arange(dim // 2)[None, :]
+    angles = positions / (max_timescale ** (2 * dims / dim))
+    table = np.concatenate([np.sin(angles), np.cos(angles)], axis=-1)
+    return jnp.asarray(table, dtype=jnp.float32)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}

@@ -1,0 +1,106 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU), vanilla, and RWKV channel-mix."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.nn.layers import ACTIVATIONS, Dense
+from repro.nn.module import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedMLP:
+    """SwiGLU / GeGLU: down( act(gate(x)) * up(x) )."""
+
+    d_model: int
+    d_ff: int
+    activation: str = "silu"
+
+    def _projs(self):
+        d, f = self.d_model, self.d_ff
+        return {
+            "gate": Dense((d,), (f,), ("embed",), ("mlp",)),
+            "up": Dense((d,), (f,), ("embed",), ("mlp",)),
+            "down": Dense((f,), (d,), ("mlp",), ("embed",)),
+        }
+
+    def specs(self):
+        return {k: l.specs() for k, l in self._projs().items()}
+
+    def __call__(self, params, x):
+        p = self._projs()
+        act = ACTIVATIONS[self.activation]
+        h = act(p["gate"](params["gate"], x)) * p["up"](params["up"], x)
+        h = logical_constraint(h, "act_batch", "act_seq", "act_mlp")
+        y = p["down"](params["down"], h)
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed")
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """Plain two-matrix FFN (granite/whisper style, with biases)."""
+
+    d_model: int
+    d_ff: int
+    activation: str = "gelu"
+    use_bias: bool = True
+
+    def _projs(self):
+        d, f = self.d_model, self.d_ff
+        return {
+            "up": Dense((d,), (f,), ("embed",), ("mlp",), use_bias=self.use_bias),
+            "down": Dense((f,), (d,), ("mlp",), ("embed",), use_bias=self.use_bias),
+        }
+
+    def specs(self):
+        return {k: l.specs() for k, l in self._projs().items()}
+
+    def __call__(self, params, x):
+        p = self._projs()
+        act = ACTIVATIONS[self.activation]
+        h = act(p["up"](params["up"], x))
+        h = logical_constraint(h, "act_batch", "act_seq", "act_mlp")
+        y = p["down"](params["down"], h)
+        return logical_constraint(y, "act_batch", "act_seq", "act_embed")
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVChannelMix:
+    """RWKV-6 channel mixing: token-shift lerp + squared-relu key."""
+
+    d_model: int
+    d_ff: int
+
+    def specs(self):
+        d, f = self.d_model, self.d_ff
+        return {
+            "mix_k": ParamSpec((d,), init="uniform", scale=0.5,
+                               axes=("embed_no_fsdp",)),
+            "mix_r": ParamSpec((d,), init="uniform", scale=0.5,
+                               axes=("embed_no_fsdp",)),
+            "key": Dense((d,), (f,), ("embed",), ("mlp",)).specs(),
+            "value": Dense((f,), (d,), ("mlp",), ("embed",)).specs(),
+            "receptance": Dense((d,), (d,), ("embed",), ("embed_no_fsdp",)).specs(),
+        }
+
+    def __call__(self, params, x, shifted=None):
+        """``shifted``: previous-token activations (decode passes the state)."""
+        d, f = self.d_model, self.d_ff
+        if shifted is None:
+            shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        mk = params["mix_k"].astype(x.dtype)
+        mr = params["mix_r"].astype(x.dtype)
+        xk = x + (shifted - x) * mk
+        xr = x + (shifted - x) * mr
+        key = Dense((d,), (f,), ("embed",), ("mlp",))(params["key"], xk)
+        k = jnp.square(jax.nn.relu(key))
+        k = logical_constraint(k, "act_batch", "act_seq", "act_mlp")
+        v = Dense((f,), (d,), ("mlp",), ("embed",))(params["value"], k)
+        r = jax.nn.sigmoid(
+            Dense((d,), (d,), ("embed",), ("embed_no_fsdp",))(
+                params["receptance"], xr))
+        return r * v

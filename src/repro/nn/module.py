@@ -1,0 +1,133 @@
+"""Minimal functional parameter system (flax-free, dry-run-first).
+
+Models are plain Python objects that expose
+
+  * ``specs() -> dict``  — a nested dict of :class:`ParamSpec` leaves
+    describing every parameter: shape, dtype, initializer, and *logical
+    axis names* used by the sharding layer.
+  * ``apply(params, ...)`` / ``__call__`` — pure functions of a parameter
+    pytree with the same structure.
+
+From one spec tree we derive everything the framework needs without ever
+materializing weights:
+
+  * ``init_params(specs, key)``      — real arrays (deterministic per path).
+  * ``abstract_params(specs)``       — ShapeDtypeStructs for AOT lowering
+    (the multi-pod dry-run compiles trillion-parameter configs this way).
+  * ``sharding_for_specs`` (distributed.sharding) — NamedSharding tree.
+  * ``count_params(specs)``          — exact parameter counts for roofline
+    MODEL_FLOPS = 6 * N * D accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | fan_in | uniform
+    scale: float = 0.02           # stddev for normal, bound for uniform
+    axes: Tuple[Optional[str], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) >= 1 else 1
+        if len(spec.shape) >= 2:
+            fan_in = int(np.prod(spec.shape[:-1]))
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.normal(key, spec.shape) * std).astype(spec.dtype)
+    if spec.init == "uniform":
+        return jax.random.uniform(key, spec.shape, minval=-spec.scale,
+                                  maxval=spec.scale).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def _walk(tree, path=()):
+    if is_spec(tree):
+        yield path, tree
+        return
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], path + (k,))
+        return
+    raise TypeError(f"spec trees are nested dicts of ParamSpec; got "
+                    f"{type(tree)} at {'/'.join(map(str, path))}")
+
+
+def init_params(spec_tree, key):
+    """Materialize a spec tree; each leaf key is derived from its path, so
+    adding/removing siblings never reshuffles other parameters."""
+    def build(tree, path=()):
+        if is_spec(tree):
+            leaf_key = jax.random.fold_in(
+                key, zlib_crc32("/".join(map(str, path))))
+            return _init_leaf(tree, leaf_key)
+        return {k: build(v, path + (k,)) for k, v in tree.items()}
+
+    return build(spec_tree)
+
+
+def zlib_crc32(s: str) -> int:
+    import zlib
+    return zlib.crc32(s.encode()) & 0x7FFFFFFF
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct tree — the dry-run stand-in for real weights."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def param_axes(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree) -> int:
+    return sum(s.size for _, s in _walk(spec_tree))
+
+
+def stack_specs(spec_tree, num: int, axis_name: str = "layers"):
+    """Prepend a stacking dimension (for scan-over-layers parameters)."""
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(shape=(num,) + s.shape, dtype=s.dtype, init=s.init,
+                         scale=s.scale, axes=(axis_name,) + tuple(s.axes))
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def cast_params(params, dtype):
+    """Cast floating-point leaves (compute-dtype entry into the model)."""
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(one, params)

@@ -1,0 +1,340 @@
+"""State-space sequence mixers: Mamba-style selective SSM (hymba's parallel
+branch) and RWKV-6 "Finch" time mixing with data-dependent decay.
+
+Both are implemented with *chunked* scans: sequential ``lax.scan`` over
+chunks with parallel (associative-scan / matmul) work inside each chunk.
+This keeps the sequential depth at ``T / chunk`` while bounding the
+materialized per-chunk state — the TPU-friendly middle ground between a
+step-by-step scan (sequential-bound) and a full associative scan over T
+(memory-bound at long context).
+
+Numerical-stability notes for RWKV-6: all decay exponentials appear only as
+``exp(sum of log w over (s, t])`` with ``log w <= 0``, i.e. always <= 1 —
+computed via pairwise differences of the within-chunk cumulative log-decay
+(never ``exp(-cumsum)`` alone, which overflows). ``log w`` is clamped to
+``>= -6`` per step; with chunk=16 the worst pairwise exponent magnitude is
+96 < log(f32 max).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import logical_constraint
+from repro.nn.layers import Dense, RMSNorm
+from repro.nn.module import ParamSpec
+
+
+def diag_ssm_scan(a, b, h0, chunk: int = 128):
+    """h_t = a_t * h_{t-1} + b_t for diagonal SSMs.
+
+    a, b: ``(B, T, ...)``; h0 ``(B, ...)``. Returns (h_all ``(B, T, ...)``,
+    h_last). Chunked: sequential over T/chunk, associative within a chunk.
+    """
+    btshape = a.shape
+    t = btshape[1]
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    def combine(x, y):
+        (a1, b1), (a2, b2) = x, y
+        return a1 * a2, b2 + a2 * b1
+
+    def body(h, ab):
+        ac, bc = ab  # (chunk, B, ...)
+        aa, bb = jax.lax.associative_scan(combine, (ac, bc), axis=0)
+        h_all = aa * h[None] + bb
+        return h_all[-1], h_all
+
+    a_c = jnp.moveaxis(a, 1, 0).reshape((n_chunks, chunk) + a.shape[:1]
+                                        + a.shape[2:])
+    b_c = jnp.moveaxis(b, 1, 0).reshape((n_chunks, chunk) + b.shape[:1]
+                                        + b.shape[2:])
+    h_last, hs = jax.lax.scan(body, h0, (a_c, b_c))
+    hs = jnp.moveaxis(hs.reshape((t,) + a.shape[:1] + a.shape[2:]), 0, 1)
+    return hs, h_last
+
+
+def selective_ssm_fused(dt, bmat, cmat, xc, a_diag, h0, chunk: int = 128):
+    """Fully fused selective-SSM: discretization + scan + output projection
+    per chunk, with a remat'd body.
+
+    The naive formulation materializes da/db/h_all at (B, T, d, N) — 16x the
+    residual stream, in f32: what blew hymba's train cell to 310 GiB/chip
+    (§Perf it. 7). Here the (chunk, B, d, N) tensors exist only inside one
+    chunk iteration, forward AND backward (``jax.checkpoint`` on the body
+    recomputes them from the (B, d, N) chunk-entry state in the bwd pass).
+
+    dt (B,T,d) f32; bmat/cmat (B,T,N) f32; xc (B,T,d); a_diag (d,N) < 0.
+    Returns y (B,T,d) f32, h_last (B,d,N).
+    """
+    t = dt.shape[1]
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    def combine(x, y):
+        (a1, b1), (a2, b2) = x, y
+        return a1 * a2, b2 + a2 * b1
+
+    @jax.checkpoint
+    def body(h, inputs):
+        dtc, bc, cc, xcc = inputs              # (chunk, B, d) / (chunk, B, N)
+        da = jnp.exp(dtc[..., None] * a_diag)             # (chunk, B, d, N)
+        db = dtc[..., None] * bc[:, :, None, :] *             xcc.astype(jnp.float32)[..., None]
+        aa, bb = jax.lax.associative_scan(combine, (da, db), axis=0)
+        h_all = aa * h[None] + bb
+        y = jnp.einsum("tbdn,tbn->tbd", h_all, cc)
+        return h_all[-1], y
+
+    resh = lambda z: jnp.moveaxis(z, 1, 0).reshape(
+        (n_chunks, chunk) + z.shape[:1] + z.shape[2:])
+    h_last, ys = jax.lax.scan(body, h0, (resh(dt), resh(bmat), resh(cmat),
+                                         resh(xc)))
+    y = jnp.moveaxis(ys.reshape((t,) + dt.shape[:1] + dt.shape[2:]), 0, 1)
+    return y, h_last
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaMixer:
+    """Selective state-space mixer (Mamba-1 style, diagonal A)."""
+
+    d_model: int
+    d_inner: Optional[int] = None
+    state_size: int = 16
+    conv_width: int = 4
+    dt_rank: Optional[int] = None
+    chunk: int = 128
+
+    @property
+    def _di(self):
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def _dtr(self):
+        return self.dt_rank or max(16, self.d_model // 16)
+
+    def specs(self):
+        d, di, n, r = self.d_model, self._di, self.state_size, self._dtr
+        return {
+            "in_proj": Dense((d,), (2 * di,), ("embed",), ("mlp",)).specs(),
+            "conv": ParamSpec((self.conv_width, di), init="fan_in",
+                              axes=("conv", "mlp")),
+            "conv_bias": ParamSpec((di,), init="zeros", axes=("mlp",)),
+            "x_dt": Dense((di,), (r,), ("mlp",), (None,)).specs(),
+            "dt_proj": Dense((r,), (di,), (None,), ("mlp",),
+                             use_bias=True).specs(),
+            "x_bc": Dense((di,), (2 * n,), ("mlp",), ("state",)).specs(),
+            "a_log": ParamSpec((di, n), init="zeros", axes=("mlp", "state")),
+            "d_skip": ParamSpec((di,), init="ones", axes=("mlp",)),
+            "out_proj": Dense((di,), (d,), ("mlp",), ("embed",)).specs(),
+        }
+
+    def _conv(self, params, x, state=None):
+        """Causal depthwise conv. x (B, T, di); state (B, W-1, di) or None."""
+        w = params["conv"].astype(x.dtype)                  # (W, di)
+        if state is None:
+            pad = jnp.zeros((x.shape[0], self.conv_width - 1, x.shape[2]),
+                            x.dtype)
+        else:
+            pad = state.astype(x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)              # (B, T+W-1, di)
+        out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(self.conv_width))
+        new_state = xp[:, -(self.conv_width - 1):]
+        return out + params["conv_bias"].astype(x.dtype), new_state
+
+    def _ssm_inputs(self, params, xc):
+        di, n = self._di, self.state_size
+        dt = Dense((di,), (self._dtr,), ("mlp",), (None,))(params["x_dt"], xc)
+        dt = Dense((self._dtr,), (di,), (None,), ("mlp",), use_bias=True)(
+            params["dt_proj"], dt)
+        dt = jax.nn.softplus(dt.astype(jnp.float32))        # (B, T, di)
+        bc = Dense((di,), (2 * n,), ("mlp",), ("state",))(params["x_bc"], xc)
+        bmat, cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))   # (di, n), < 0
+        return dt, bmat, cmat, a
+
+    def __call__(self, params, x, state=None):
+        """x (B, T, d). state: None (train) or dict(h, conv) for decode.
+        Returns (y, new_state)."""
+        di, n = self._di, self.state_size
+        xz = Dense((self.d_model,), (2 * di,), ("embed",), ("mlp",))(
+            params["in_proj"], x)
+        xi, z = jnp.split(xz, 2, axis=-1)
+        conv_state = None if state is None else state["conv"]
+        xc, new_conv = self._conv(params, xi, conv_state)
+        xc = jax.nn.silu(xc)
+        dt, bmat, cmat, a = self._ssm_inputs(params, xc)
+        h0 = (jnp.zeros((x.shape[0], di, n), jnp.float32) if state is None
+              else state["h"])
+        if x.shape[1] == 1:  # decode fast path
+            da = jnp.exp(dt[:, 0, :, None] * a)
+            db = dt[:, 0, :, None] * bmat[:, 0, None, :] * \
+                xc.astype(jnp.float32)[:, 0, :, None]
+            h_last = da * h0 + db
+            y = jnp.einsum("bdn,bn->bd", h_last, cmat[:, 0])[:, None]
+        else:
+            chunk = min(self.chunk, x.shape[1])
+            y, h_last = selective_ssm_fused(dt, bmat, cmat, xc, a, h0,
+                                            chunk=chunk)
+        y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+        y = (y.astype(x.dtype)) * jax.nn.silu(z)
+        out = Dense((di,), (self.d_model,), ("mlp",), ("embed",))(
+            params["out_proj"], y)
+        return out, {"h": h_last, "conv": new_conv}
+
+    def init_state(self, batch: int, dtype=jnp.float32):
+        return {"h": jnp.zeros((batch, self._di, self.state_size), jnp.float32),
+                "conv": jnp.zeros((batch, self.conv_width - 1, self._di),
+                                  dtype)}
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6TimeMix:
+    """RWKV-6 time mixing: data-dependent per-channel decay (Finch)."""
+
+    d_model: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    chunk: int = 16
+    min_log_w: float = -6.0
+
+    @property
+    def num_heads(self):
+        assert self.d_model % self.head_dim == 0
+        return self.d_model // self.head_dim
+
+    def specs(self):
+        d = self.d_model
+        mix = lambda: ParamSpec((d,), init="uniform", scale=0.5,
+                                axes=("embed_no_fsdp",))
+        return {
+            "mix_r": mix(), "mix_k": mix(), "mix_v": mix(), "mix_w": mix(),
+            "mix_g": mix(),
+            "receptance": Dense((d,), (d,), ("embed",), ("heads",)).specs(),
+            "key": Dense((d,), (d,), ("embed",), ("heads",)).specs(),
+            "value": Dense((d,), (d,), ("embed",), ("heads",)).specs(),
+            "gate": Dense((d,), (d,), ("embed",), ("heads",)).specs(),
+            "output": Dense((d,), (d,), ("heads",), ("embed",)).specs(),
+            "w0": ParamSpec((d,), init="uniform", scale=1.0,
+                            axes=("embed_no_fsdp",)),
+            "w_lora_a": Dense((d,), (self.decay_lora,), ("embed",),
+                              (None,)).specs(),
+            "w_lora_b": Dense((self.decay_lora,), (d,), (None,),
+                              ("heads",)).specs(),
+            "bonus": ParamSpec((d,), init="uniform", scale=0.5,
+                               axes=("embed_no_fsdp",)),
+            "ln_scale": ParamSpec((d,), init="ones", axes=("embed_no_fsdp",)),
+            "ln_bias": ParamSpec((d,), init="zeros", axes=("embed_no_fsdp",)),
+        }
+
+    def _proj(self, params, name, x):
+        d = self.d_model
+        out_ax = ("embed",) if name == "output" else ("heads",)
+        in_ax = ("heads",) if name == "output" else ("embed",)
+        return Dense((d,), (d,), in_ax, out_ax)(params[name], x)
+
+    def _mixed_inputs(self, params, x, shifted):
+        mix = lambda name: x + (shifted - x) * params[name].astype(x.dtype)
+        xr, xk, xv, xw, xg = (mix("mix_r"), mix("mix_k"), mix("mix_v"),
+                              mix("mix_w"), mix("mix_g"))
+        b, t, d = x.shape
+        h, n = self.num_heads, self.head_dim
+        r = self._proj(params, "receptance", xr).reshape(b, t, h, n)
+        k = self._proj(params, "key", xk).reshape(b, t, h, n)
+        v = self._proj(params, "value", xv).reshape(b, t, h, n)
+        g = jax.nn.silu(self._proj(params, "gate", xg))
+        wl = Dense((d,), (self.decay_lora,), ("embed",), (None,))(
+            params["w_lora_a"], jnp.tanh(xw))
+        wl = Dense((self.decay_lora,), (d,), (None,), ("heads",))(
+            params["w_lora_b"], wl)
+        log_w = -jnp.exp(
+            jnp.clip((params["w0"].astype(jnp.float32) + wl.astype(jnp.float32)),
+                     -10.0, 1.8))
+        log_w = jnp.clip(log_w, self.min_log_w, -1e-5).reshape(b, t, h, n)
+        return r, k, v, g, log_w
+
+    def _wkv_chunk(self, s0, rkvw):
+        """One chunk of the WKV recurrence. s0 (B,H,N,N); r/k/v/lw (B,L,H,N)."""
+        r, k, v, lw, u = rkvw
+        b, L, h, n = r.shape
+        la = jnp.cumsum(lw, axis=1)                      # inclusive (B,L,H,N)
+        la_excl = la - lw
+        rf = r.astype(jnp.float32)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        # inter-chunk: r_t decayed to chunk start, applied to s0
+        r_dec = rf * jnp.exp(la_excl)
+        y = jnp.einsum("blhn,bhnm->blhm", r_dec, s0)
+        # intra-chunk strictly-lower-triangular attention with decay
+        expo = la_excl[:, :, None] - la[:, None, :]      # (B, L, S, H, N)
+        tri = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])
+        expo = jnp.where(tri[None, :, :, None, None], expo, -jnp.inf)
+        scores = jnp.einsum("blhn,bshn,blshn->blsh", rf, kf,
+                            jnp.exp(expo))
+        y = y + jnp.einsum("blsh,bshm->blhm", scores, vf)
+        # diagonal bonus term
+        c = jnp.sum(rf * u * kf, axis=-1)                # (B, L, H)
+        y = y + c[..., None] * vf
+        # state update to chunk end
+        decay_out = jnp.exp(la[:, -1])                   # (B, H, N)
+        k_dec = kf * jnp.exp(la[:, -1:] - la)            # (B, L, H, N)
+        s_new = s0 * decay_out[..., None] + jnp.einsum(
+            "blhn,blhm->bhnm", k_dec, vf)
+        return s_new, y
+
+    def __call__(self, params, x, state=None):
+        """x (B, T, d); state dict(s, shift) for decode. Returns (y, state)."""
+        b, t, d = x.shape
+        h, n = self.num_heads, self.head_dim
+        if state is None:
+            shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            s0 = jnp.zeros((b, h, n, n), jnp.float32)
+        else:
+            shifted = jnp.concatenate([state["shift"][:, None], x[:, :-1]], 1)
+            s0 = state["s"]
+        r, k, v, g, lw = self._mixed_inputs(params, x, shifted)
+        u = params["bonus"].astype(jnp.float32).reshape(h, n)
+
+        if t == 1:
+            rf, kf, vf = (z[:, 0].astype(jnp.float32) for z in (r, k, v))
+            y1 = jnp.einsum("bhn,bhnm->bhm", rf, s0)
+            y1 = y1 + jnp.sum(rf * u * kf, -1)[..., None] * vf
+            s_new = s0 * jnp.exp(lw[:, 0])[..., None] + jnp.einsum(
+                "bhn,bhm->bhnm", kf, vf)
+            y = y1[:, None]
+        else:
+            chunk = min(self.chunk, t)
+            assert t % chunk == 0, (t, chunk)
+            nc = t // chunk
+            resh = lambda z: jnp.moveaxis(
+                z.reshape(b, nc, chunk, h, n), 1, 0)
+
+            def body(s, inputs):
+                rc, kc, vc, lwc = inputs
+                s_new, y = self._wkv_chunk(s, (rc, kc, vc, lwc, u))
+                return s_new, y
+
+            s_new, ys = jax.lax.scan(body, s0, (resh(r), resh(k), resh(v),
+                                                resh(lw)))
+            y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, n)
+
+        # per-head group norm
+        y32 = y.reshape(b, -1, h, n).astype(jnp.float32)
+        mu = y32.mean(-1, keepdims=True)
+        var = y32.var(-1, keepdims=True)
+        y32 = (y32 - mu) * jax.lax.rsqrt(var + 64e-5)
+        yn = y32.reshape(b, -1, d) * params["ln_scale"].astype(jnp.float32) \
+            + params["ln_bias"].astype(jnp.float32)
+        yn = (yn.astype(x.dtype) * g)
+        out = self._proj(params, "output", yn)
+        new_state = {"s": s_new, "shift": x[:, -1]}
+        return logical_constraint(out, "act_batch", "act_seq", "act_embed"), new_state
+
+    def init_state(self, batch: int, dtype=jnp.float32):
+        h, n = self.num_heads, self.head_dim
+        return {"s": jnp.zeros((batch, h, n, n), jnp.float32),
+                "shift": jnp.zeros((batch, self.d_model), dtype)}

@@ -1,0 +1,77 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization).
+
+At multi-pod scale the inter-pod links (DCI) are an order of magnitude
+slower than intra-pod ICI, so the cross-pod gradient reduction is the
+bandwidth bottleneck. Two compressors are provided:
+
+  * int8 stochastic-free linear quantization with per-tensor scales
+    (8x fewer DCI bytes than f32, 2x fewer than bf16), plus
+  * top-k sparsification with **error feedback** (the residual is carried
+    to the next step so compression error doesn't bias convergence —
+    Karimireddy et al., 2019).
+
+These are applied *around* the cross-pod psum inside a ``shard_map``-based
+data-parallel step (see ``repro.distributed.dp_compress``); within a pod
+gradients still reduce at full precision over ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_gradients(grads, bits: int = 8):
+    """Per-tensor symmetric linear quantization to int8."""
+    assert bits == 8, "int8 only"
+
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+
+    return jax.tree.map(one, grads)
+
+
+def decompress_gradients(comp):
+    def one(c):
+        return c["q"].astype(jnp.float32) * c["scale"]
+
+    return jax.tree.map(one, comp,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x
+                        and "scale" in x and len(x) == 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackCompressor:
+    """Top-k sparsification with an error-feedback residual accumulator."""
+
+    k_frac: float = 0.05
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, residual):
+        """Returns (sparse_grads_dense, new_residual). The "compressed"
+        tensor is materialized densely (values at non-top-k positions are
+        zero) — on the wire a sparse encoding would ship (idx, val) pairs;
+        the dense stand-in keeps the algorithm exact for testing while the
+        byte-count accounting lives in the roofline model."""
+        def one(g, r):
+            acc = g.astype(jnp.float32) + r
+            flat = jnp.abs(acc).reshape(-1)
+            k = max(1, int(flat.shape[0] * self.k_frac))
+            thresh = jax.lax.top_k(flat, k)[0][-1]
+            mask = (jnp.abs(acc) >= thresh).astype(jnp.float32)
+            sent = acc * mask
+            return sent, acc - sent
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        sent = treedef.unflatten([o[0] for o in out])
+        new_r = treedef.unflatten([o[1] for o in out])
+        return sent, new_r

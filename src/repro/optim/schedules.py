@@ -1,0 +1,36 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return peak * frac
+    return fn
+
+
+def cosine_decay(peak: float, decay_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5
+                      * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,182 @@
+"""Gradient-transform optimizers (minimal optax-like, sharding-friendly).
+
+Implementation note: multi-output tree maps are done by flattening against
+the *parameter* treedef (``treedef.flatten_up_to``) so optimizer-state
+leaves may themselves be dicts (adafactor's factored statistics) without
+any ``is_leaf`` ambiguity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], Tuple[Any, OptState]]
+    """update(grads, state, params) -> (updates, new_state); updates already
+    carry the -lr sign and are *added* to params by the caller."""
+
+
+def _to_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params):
+        new_states = []
+        for o, s in zip(opts, state):
+            grads, ns = o.update(grads, s, params)
+            new_states.append(ns)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+        return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                       ).astype(g.dtype), grads), ()
+
+    return Optimizer(init, update)
+
+
+def sgd(lr) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        upd = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, mu_dtype=jnp.float32) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dtype), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        g_flat, treedef = jax.tree.flatten(grads)
+        mu_flat = treedef.flatten_up_to(state["mu"])
+        nu_flat = treedef.flatten_up_to(state["nu"])
+        p_flat = treedef.flatten_up_to(params)
+        u_flat, mu_new, nu_new = [], [], []
+        for g, mu, nu, p in zip(g_flat, mu_flat, nu_flat, p_flat):
+            g = g.astype(jnp.float32)
+            mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+            nu_n = b2 * nu + (1 - b2) * g * g
+            u = -lr_t * (mu_n / b1c / (jnp.sqrt(nu_n / b2c) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            u_flat.append(u)
+            mu_new.append(mu_n.astype(mu_dtype))
+            nu_new.append(nu_n)
+        return (treedef.unflatten(u_flat),
+                {"step": step, "mu": treedef.unflatten(mu_new),
+                 "nu": treedef.unflatten(nu_new)})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    Matrices with both trailing dims >= ``min_dim_size_to_factor`` store two
+    rank-1 statistics instead of the full second moment; everything else
+    falls back to an unfactored accumulator. Momentum-free (the memory-lean
+    configuration used by PaLM-scale trainings) — this is what lets the
+    kimi-k2 1T-parameter train_step fit 16 GB/chip at 512 chips.
+    """
+    sched = _to_schedule(lr)
+
+    def _factored(shape):
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(one, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        g_flat, treedef = jax.tree.flatten(grads)
+        v_flat = treedef.flatten_up_to(state["v"])
+        p_flat = treedef.flatten_up_to(params)
+        u_out, v_out = [], []
+        for g, v, p in zip(g_flat, v_flat, p_flat):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                row = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                denom = row[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                u = g * jax.lax.rsqrt(jnp.maximum(nv["v"], eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            u_out.append(u)
+            v_out.append(nv)
+        return (treedef.unflatten(u_out),
+                {"step": step, "v": treedef.unflatten(v_out)})
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params,
+        updates)

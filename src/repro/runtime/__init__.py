@@ -1,0 +1,7 @@
+"""Runtime: step functions, fault-tolerant trainer, serving loop, monitors."""
+from repro.runtime import steps
+from repro.runtime.steps import (input_specs, lm_loss, make_prefill_step,
+                                 make_serve_step, make_train_step)
+
+__all__ = ["steps", "input_specs", "lm_loss", "make_prefill_step",
+           "make_serve_step", "make_train_step"]

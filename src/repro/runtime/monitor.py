@@ -1,0 +1,85 @@
+"""Run-health monitors: step timing / straggler detection / NaN guards.
+
+On a real multi-pod deployment each host runs this monitor; step times are
+periodically all-gathered (host-side, out of the jit path) and hosts whose
+rolling median exceeds ``straggler_factor`` x the fleet median are flagged
+for the cluster scheduler to drain-and-replace. Here the fleet is one
+process, but the policy object, its thresholds, and its decision output are
+the production ones and are unit-tested directly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StepTimer:
+    window: int = 50
+
+    def __post_init__(self):
+        self.times: Deque[float] = collections.deque(maxlen=self.window)
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.times.append(dt)
+        return dt
+
+    @property
+    def median(self) -> float:
+        if not self.times:
+            return float("nan")
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Flags ranks whose rolling median step time is anomalously slow."""
+
+    straggler_factor: float = 1.5
+    min_samples: int = 10
+
+    def evaluate(self, medians: Dict[int, float]) -> List[int]:
+        """medians: rank -> rolling median step seconds. Returns flagged
+        ranks (candidates for preemptive replacement / checkpoint-evict)."""
+        vals = [v for v in medians.values() if math.isfinite(v)]
+        if len(vals) < 1:
+            return []
+        fleet = sorted(vals)[len(vals) // 2]
+        return [r for r, v in medians.items()
+                if math.isfinite(v) and v > self.straggler_factor * fleet]
+
+
+@dataclasses.dataclass
+class NaNGuard:
+    """Skip-and-count policy for non-finite losses; halt after a run of them.
+
+    Transient non-finite steps (a bad batch, a flaky host) are skipped —
+    the params/opt-state update for that step is discarded. ``max_consecutive``
+    non-finite steps in a row aborts the run (systematic divergence).
+    """
+
+    max_consecutive: int = 5
+
+    def __post_init__(self):
+        self.consecutive = 0
+        self.total_skipped = 0
+
+    def check(self, loss: float) -> str:
+        """Returns 'ok' | 'skip' | 'halt'."""
+        if math.isfinite(loss):
+            self.consecutive = 0
+            return "ok"
+        self.consecutive += 1
+        self.total_skipped += 1
+        if self.consecutive >= self.max_consecutive:
+            return "halt"
+        return "skip"

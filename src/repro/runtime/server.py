@@ -1,0 +1,135 @@
+"""Batched serving loop: continuous batching over fixed decode slots.
+
+Production shape (vLLM-style, adapted to TPU static shapes):
+
+  * ``num_slots`` decode lanes share ONE jitted serve step — shapes never
+    change, so there is exactly one compilation;
+  * every scheduler tick advances *all* active slots by one token in a
+    single device call, with **per-slot cache cursors** (a ``(B,)`` index
+    vector; the attention layers scatter each row at its own position and
+    mask per-row) — newly admitted requests prefill token-by-token while
+    older requests keep decoding, with no head-of-line blocking;
+  * retired slots are re-admitted immediately; their stale cache rows are
+    unreachable because the new request's cursor restarts at 0 and the
+    per-row causal mask hides everything beyond it.
+
+Sampling happens host-side from the returned last-token logits (greedy or
+temperature); fusing sampling into the device step is a listed perf
+follow-up in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    generated: Optional[List[int]] = None
+
+    @property
+    def text_len(self) -> int:
+        return len(self.prompt) + len(self.generated or ())
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    cursor: int = 0                 # tokens written into this slot's cache
+    prefill_pos: int = 0            # next prompt token to feed
+
+
+class Server:
+    def __init__(self, model, params, *, num_slots: int, max_len: int,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.rng = np.random.default_rng(seed)
+        self.cache = model.init_cache(num_slots, max_len, jnp.float32)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self.ticks = 0
+        self._decode = jax.jit(self._decode_impl)
+
+    def _decode_impl(self, params, cache, tokens, index_vec):
+        logits, _, new_cache = self.model(params, tokens, cache=cache,
+                                          cache_index=index_vec, remat=False)
+        return logits[:, -1], new_cache
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, request: Request):
+        request.generated = []
+        self.queue.append(request)
+
+    def _admit(self):
+        for slot in self.slots:
+            if slot.request is None and self.queue:
+                slot.request = self.queue.pop(0)
+                slot.cursor = 0
+                slot.prefill_pos = 0
+
+    # -- main loop -----------------------------------------------------------
+    def step(self):
+        """One tick: admit, advance every active slot one token, retire."""
+        self._admit()
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        index = np.zeros(self.num_slots, np.int32)
+        active = []
+        for i, slot in enumerate(self.slots):
+            req = slot.request
+            if req is None:
+                continue
+            active.append(i)
+            index[i] = slot.cursor
+            if slot.prefill_pos < len(req.prompt):
+                tokens[i, 0] = req.prompt[slot.prefill_pos]
+            else:
+                tokens[i, 0] = req.generated[-1]
+        if not active:
+            return
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(index))
+        logits = np.asarray(logits.astype(jnp.float32))
+        self.ticks += 1
+        for i in active:
+            slot = self.slots[i]
+            req = slot.request
+            slot.cursor += 1
+            if slot.prefill_pos < len(req.prompt):
+                slot.prefill_pos += 1
+                if slot.prefill_pos < len(req.prompt):
+                    continue                      # still prefilling
+            tok = self._sample(logits[i], req)
+            req.generated.append(tok)
+            finished = (len(req.generated) >= req.max_new_tokens
+                        or (self.eos_id is not None and tok == self.eos_id)
+                        or slot.cursor >= self.max_len - 1)
+            if finished:
+                self.done[req.uid] = req
+                slot.request = None
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / req.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        while (self.queue or any(s.request for s in self.slots)) \
+                and self.ticks < max_ticks:
+            self.step()
+        return self.done

@@ -1,0 +1,210 @@
+"""Step functions: train_step / prefill / serve_step for every architecture.
+
+These are the units the launcher jits, the dry-run lowers at 512 devices,
+and the smoke tests run on CPU. Inputs are declared via :func:`input_specs`
+(ShapeDtypeStructs — the dry-run never allocates the trillion-parameter
+configs) and sharded via the logical-axis rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (DEFAULT_RULES, batch_sharding,
+                                        logical_constraint, spec_for)
+from repro.nn import module as nnm
+from repro.nn.module import cast_params
+from repro.nn.transformer import build_model
+from repro.optim.transforms import Optimizer, apply_updates
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, labels, mask=None):
+    """Token cross entropy, computed against vocab-sharded logits.
+
+    The log-softmax reductions are over the (model-sharded) vocab axis;
+    GSPMD turns them into cheap scalar all-reduces instead of gathering the
+    full logits — the reason we keep the vocab axis sharded end to end.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is None:
+        return jnp.mean(nll)
+    w = mask.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    impl: Optional[str] = None,
+                    remat: bool = True, unroll: bool = False) -> Callable:
+    model = build_model(cfg, impl=impl, unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p32):
+            # Cast parameters to the compute dtype HERE, on the FSDP-sharded
+            # storage: every downstream weight all-gather then moves bf16
+            # (not f32), and the matmul-transpose gradient reductions across
+            # the data axis reduce in bf16 too — halving the two largest
+            # collective classes. Grads arrive f32 at the optimizer via the
+            # cast transpose.
+            p = cast_params(p32, cfg.compute_dtype)
+            if cfg.enc_dec:
+                logits, aux, _ = model(p, batch["frames"], batch["tokens"])
+            elif cfg.vision_prefix:
+                logits, aux, _ = model(p, batch["tokens"],
+                                       prefix_embeds=batch["prefix"],
+                                       remat=remat)
+                logits = logits[:, cfg.vision_prefix:]
+            else:
+                logits, aux, _ = model(p, batch["tokens"], remat=remat)
+            loss = lm_loss(logits, batch["labels"])
+            return loss + aux, (loss, aux)
+
+        (_, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, impl: Optional[str] = None,
+                      unroll: bool = False) -> Callable:
+    model = build_model(cfg, impl=impl, unroll=unroll)
+
+    def prefill(params, batch):
+        if cfg.enc_dec:
+            logits, _, _ = model(params, batch["frames"], batch["tokens"])
+        elif cfg.vision_prefix:
+            logits, _, _ = model(params, batch["tokens"],
+                                 prefix_embeds=batch["prefix"], remat=False)
+        else:
+            logits, _, _ = model(params, batch["tokens"], remat=False)
+        return logits[:, -1]
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, impl: Optional[str] = None,
+                    unroll: bool = False) -> Callable:
+    """One decode step: new token + preallocated cache at ``index``."""
+    model = build_model(cfg, impl=impl, unroll=unroll)
+
+    def serve_step(params, cache, tokens, index, enc_out=None):
+        if cfg.enc_dec:
+            logits, new_cache = model.decode(params, tokens, enc_out,
+                                             cache=cache, cache_index=index)
+        else:
+            logits, _, new_cache = model(params, tokens, cache=cache,
+                                         cache_index=index, remat=False)
+        return logits[:, -1], new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (dry-run) and sharding resolution
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the non-parameter step inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = cfg.compute_dtype
+    if shape.mode == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.enc_dec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), cdt)
+        if cfg.vision_prefix:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_prefix, cfg.d_model), cdt)
+        return specs
+    if shape.mode == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.enc_dec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), cdt)
+        if cfg.vision_prefix:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_prefix, cfg.d_model), cdt)
+        return specs
+    if shape.mode == "decode":
+        model = build_model(cfg)
+        cache = jax.eval_shape(
+            functools.partial(model.init_cache, b, s, cdt))
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                 "index": jax.ShapeDtypeStruct((), i32),
+                 "cache": cache}
+        if cfg.enc_dec:
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), cdt)
+        return specs
+    raise ValueError(shape.mode)
+
+
+# Logical axes for cache entries, keyed by leaf name. Trailing dims are
+# matched right-to-left so the leading "layers" stacking dim is covered.
+_CACHE_AXES = {
+    "k": (None, "act_batch", "act_kv", "act_kvlen", None),
+    "v": (None, "act_batch", "act_kv", "act_kvlen", None),
+    "ckv": (None, "act_batch", None, "act_kvlen", None),
+    "kr": (None, "act_batch", None, "act_kvlen", None),
+    "s": (None, "act_batch", "act_heads", None, None),
+    "h": (None, "act_batch", "act_mlp", None),
+    "conv": (None, "act_batch", None, "act_mlp"),
+    "shift": (None, "act_batch", None),
+    "cmix_shift": (None, "act_batch", None),
+}
+
+
+def cache_sharding(cache_tree, mesh, rules=None):
+    """NamedSharding tree for a (possibly layer-stacked) decode cache."""
+    from jax.sharding import NamedSharding
+
+    def walk(tree, key=None):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        axes = _CACHE_AXES.get(key)
+        if axes is None:
+            logical = [None] * tree.ndim
+        elif tree.ndim >= len(axes):
+            logical = [None] * (tree.ndim - len(axes)) + list(axes)
+        else:
+            logical = list(axes[len(axes) - tree.ndim:])
+        return NamedSharding(mesh, spec_for(tree.shape, logical, mesh, rules))
+
+    return walk(cache_tree)
+
+
+def batch_shardings(specs: Dict[str, Any], mesh, rules=None):
+    """Shardings for the input-spec dict (batch-leading arrays + cache)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_sharding(v, mesh, rules)
+        elif k == "index":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = batch_sharding(mesh, v.shape, rules)
+    return out

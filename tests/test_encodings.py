@@ -1,0 +1,211 @@
+"""Tests for the group encodings and relative attention (Alg. 1 vs Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attention, encodings, se2
+
+
+def rand_qkv(rng, n, m, d, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(n, d)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(m, d)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(m, d)), dtype=dtype)
+    return q, k, v
+
+
+def rand_se2(rng, n, radius=3.0):
+    xy = rng.uniform(-radius, radius, size=(n, 2))
+    th = rng.uniform(-np.pi, np.pi, size=(n, 1))
+    return jnp.asarray(np.concatenate([xy, th], -1), dtype=jnp.float32)
+
+
+ENCS = {
+    "rope1d": lambda: encodings.Rope1D(head_dim=32),
+    "rope2d": lambda: encodings.Rope2D(head_dim=32, max_freq=0.5),
+    "se2_repr": lambda: encodings.SE2Repr(head_dim=30),
+    "se2_fourier": lambda: encodings.SE2Fourier(head_dim=30, num_terms=20),
+}
+
+
+def poses_for(enc, rng, n):
+    if enc.pose_dim == 1:
+        return jnp.asarray(rng.uniform(0, 64, size=(n, 1)), dtype=jnp.float32)
+    if enc.pose_dim == 2:
+        return jnp.asarray(rng.uniform(-4, 4, size=(n, 2)), dtype=jnp.float32)
+    return rand_se2(rng, n)
+
+
+@pytest.mark.parametrize("name", sorted(ENCS))
+def test_linear_matches_quadratic(name):
+    """Algorithm 2 == Algorithm 1 (to Fourier tolerance for se2_fourier)."""
+    enc = ENCS[name]()
+    rng = np.random.default_rng(0)
+    n, m = 9, 13
+    q, k, v = rand_qkv(rng, n, m, enc.head_dim)
+    pq, pk = poses_for(enc, rng, n), poses_for(enc, rng, m)
+    out_lin = attention.relative_attention_linear(enc, q, k, v, pq, pk)
+    out_quad = attention.relative_attention_quadratic(enc, q, k, v, pq, pk)
+    tol = 5e-3 if name == "se2_fourier" else 2e-5
+    np.testing.assert_allclose(np.asarray(out_lin), np.asarray(out_quad),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("name", sorted(ENCS))
+def test_fold_scale_equivalent(name):
+    """Paper-verbatim Alg. 2 scaling (c/d)^{1/4} == explicit 1/sqrt(d)."""
+    enc = ENCS[name]()
+    rng = np.random.default_rng(1)
+    q, k, v = rand_qkv(rng, 6, 8, enc.head_dim)
+    pq, pk = poses_for(enc, rng, 6), poses_for(enc, rng, 8)
+    a = attention.relative_attention_linear(enc, q, k, v, pq, pk,
+                                            fold_scale=False)
+    b = attention.relative_attention_linear(enc, q, k, v, pq, pk,
+                                            fold_scale=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(ENCS))
+def test_masking(name):
+    """Masked-out keys must not influence the output."""
+    enc = ENCS[name]()
+    rng = np.random.default_rng(2)
+    n, m = 5, 11
+    q, k, v = rand_qkv(rng, n, m, enc.head_dim)
+    pq, pk = poses_for(enc, rng, n), poses_for(enc, rng, m)
+    mask = jnp.asarray(rng.uniform(size=(n, m)) > 0.3)
+    mask = mask.at[:, 0].set(True)   # keep at least one key per query
+    mask = mask.at[:, 8:].set(False)  # keys >= 8 are masked for all queries
+    out = attention.relative_attention_linear(enc, q, k, v, pq, pk, mask=mask)
+    # perturb fully-masked-out keys/values; output must not change
+    noise = jnp.asarray(rng.normal(size=k.shape), dtype=k.dtype) * 10
+    keep = mask.any(axis=0)[:, None]
+    k2 = jnp.where(keep, k, k + noise)
+    v2 = jnp.where(keep, v, v + noise)
+    out2 = attention.relative_attention_linear(enc, q, k2, v2, pq, pk, mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)
+
+
+@pytest.mark.parametrize("name,tol", [
+    ("rope1d", 1e-4), ("rope2d", 1e-4), ("se2_repr", 1e-4),
+    ("se2_fourier", 2e-2),
+])
+def test_invariance(name, tol):
+    """Output invariant to a global transform of all poses (paper Eq. 2).
+
+    rope/se2_repr are exactly invariant; se2_fourier is invariant up to the
+    Fourier truncation error, provided transformed positions stay within the
+    magnitude budget the basis size was chosen for.
+    """
+    enc = ENCS[name]()
+    rng = np.random.default_rng(3)
+    n, m = 8, 12
+    q, k, v = rand_qkv(rng, n, m, enc.head_dim)
+    if enc.pose_dim == 3:
+        pq, pk = rand_se2(rng, n, radius=2.0), rand_se2(rng, m, radius=2.0)
+        z = jnp.asarray([1.0, -0.5, 0.8], dtype=jnp.float32)
+    elif enc.pose_dim == 2:
+        pq = jnp.asarray(rng.uniform(-3, 3, (n, 2)), dtype=jnp.float32)
+        pk = jnp.asarray(rng.uniform(-3, 3, (m, 2)), dtype=jnp.float32)
+        z = jnp.asarray([11.0, -7.0], dtype=jnp.float32)
+    else:
+        pq = jnp.asarray(rng.uniform(0, 32, (n, 1)), dtype=jnp.float32)
+        pk = jnp.asarray(rng.uniform(0, 32, (m, 1)), dtype=jnp.float32)
+        z = jnp.asarray([100.0], dtype=jnp.float32)
+    gap = attention.invariance_gap(enc, q, k, v, pq, pk, z)
+    assert float(gap) < tol, float(gap)
+
+
+def test_rope1d_matches_classic_rope():
+    """Our Rope1D must equal the standard rotate-half RoPE formulation."""
+    enc = encodings.Rope1D(head_dim=16)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(5, 16)), dtype=jnp.float32)
+    pos = jnp.asarray(np.arange(5.0)[:, None], dtype=jnp.float32)
+    got = enc.transform_q(x, pos)
+    # classic: split halves, rotate
+    freqs = encodings.rope_frequencies(8)
+    ang = np.arange(5.0)[:, None] * freqs[None, :]
+    cos, sin = np.cos(ang), np.sin(ang)
+    x0, x1 = np.asarray(x[:, :8]), np.asarray(x[:, 8:])
+    expect = np.concatenate([x0 * cos - x1 * sin, x0 * sin + x1 * cos], -1)
+    np.testing.assert_allclose(np.asarray(got), expect, atol=1e-5)
+
+
+def test_se2_fourier_expanded_dim():
+    enc = encodings.SE2Fourier(head_dim=12, num_terms=7)
+    assert enc.num_blocks == 2
+    assert enc.expanded_dim == 2 * (4 * 7 + 2)
+    rng = np.random.default_rng(5)
+    q, k, v = rand_qkv(rng, 3, 4, 12)
+    pq, pk = rand_se2(rng, 3), rand_se2(rng, 4)
+    assert enc.transform_q(q, pq).shape == (3, enc.expanded_dim)
+    assert enc.transform_k(k, pk).shape == (4, enc.expanded_dim)
+    o = attention.relative_attention_linear(enc, q, k, v, pq, pk)
+    assert o.shape == (3, 12)
+
+
+def test_se2_fourier_score_matches_target():
+    """q~^T k~ must approximate q^T diag[rho(x_r), rho(y_r), rho(t_r)] k."""
+    enc = encodings.SE2Fourier(head_dim=6, num_terms=24, min_scale=1.0,
+                               max_scale=1.0)
+    rng = np.random.default_rng(6)
+    q, k, _ = rand_qkv(rng, 16, 16, 6)
+    pq, pk = rand_se2(rng, 16, radius=3.0), rand_se2(rng, 16, radius=3.0)
+    qt, kt = enc.transform_q(q, pq), enc.transform_k(k, pk)
+    scores = np.asarray(qt @ kt.T)
+    rel = se2.relative(pq[:, None, :], pk[None, :, :])
+    phik = enc.apply_phi(rel, jnp.broadcast_to(k[None, :, :], (16, 16, 6)))
+    target = np.asarray(jnp.einsum("nd,nmd->nm", q, phik))
+    np.testing.assert_allclose(scores, target, atol=2e-3)
+
+
+def test_batched_heads_broadcast():
+    """Encodings must broadcast over (batch, heads, seq, dim)."""
+    enc = encodings.SE2Fourier(head_dim=12, num_terms=8)
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 3, 5, 12)), dtype=jnp.float32)
+    pose = jnp.asarray(
+        np.concatenate([rng.uniform(-2, 2, (2, 1, 5, 2)),
+                        rng.uniform(-3, 3, (2, 1, 5, 1))], -1),
+        dtype=jnp.float32)
+    pose = jnp.broadcast_to(pose, (2, 3, 5, 3))
+    out = enc.transform_q(q, pose)
+    assert out.shape == (2, 3, 5, enc.expanded_dim)
+    # row 0 computed standalone must match
+    single = enc.transform_q(q[0, 0], pose[0, 0])
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(single),
+                               atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       radius=st.floats(0.1, 3.5),
+       num_terms=st.integers(18, 30))
+def test_property_linear_equals_quadratic_se2(seed, radius, num_terms):
+    """Property: Alg. 2 tracks Alg. 1 within tolerance across random scenes."""
+    enc = encodings.SE2Fourier(head_dim=12, num_terms=num_terms,
+                               min_scale=0.5, max_scale=1.0)
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, 6, 7, 12)
+    pq, pk = rand_se2(rng, 6, radius), rand_se2(rng, 7, radius)
+    a = attention.relative_attention_linear(enc, q, k, v, pq, pk)
+    b = attention.relative_attention_quadratic(enc, q, k, v, pq, pk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)
+
+
+def test_adaptive_basis_cuts_expanded_dim_within_error_budget():
+    """Beyond-paper scale-adaptive truncation (see benchmarks/adaptive_basis)."""
+    uni = encodings.SE2Fourier(head_dim=24, num_terms=18, min_scale=0.25,
+                               max_scale=1.0)
+    ada = encodings.SE2Fourier(head_dim=24, num_terms=18, min_scale=0.25,
+                               max_scale=1.0, adaptive_terms=True,
+                               min_terms=6)
+    assert ada.expanded_dim < 0.78 * uni.expanded_dim
+    rng = np.random.default_rng(0)
+    q, k, v = rand_qkv(rng, 8, 10, 24)
+    pq, pk = rand_se2(rng, 8, 3.0), rand_se2(rng, 10, 3.0)
+    a = attention.relative_attention_linear(ada, q, k, v, pq, pk)
+    b = attention.relative_attention_quadratic(ada, q, k, v, pq, pk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)

@@ -1,0 +1,65 @@
+"""Tests for the Fourier quadrature machinery (paper Sec. III-B, Fig. 3/4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fourier
+
+
+def test_basis_values():
+    z = jnp.asarray([0.0, np.pi / 2], dtype=jnp.float32)
+    b = np.asarray(fourier.eval_basis(z, 5))
+    # g = [1, sin z, cos z, sin 2z, cos 2z]
+    np.testing.assert_allclose(b[0], [1, 0, 1, 0, 1], atol=1e-6)
+    np.testing.assert_allclose(b[1], [1, 1, 0, 0, -1], atol=1e-6)
+
+
+def test_quadrature_exact_for_bandlimited():
+    """A function already in the basis span must be recovered exactly."""
+    F = 8
+    nodes = fourier.quadrature_nodes(F)
+    target_coeffs = np.zeros(F, dtype=np.float32)
+    target_coeffs[0] = 0.3
+    target_coeffs[3] = -1.2   # sin(2z)
+    target_coeffs[6] = 0.7    # cos(3z)
+    basis_at_nodes = np.asarray(fourier.eval_basis(nodes, F))
+    samples = jnp.asarray(basis_at_nodes @ target_coeffs)
+    got = np.asarray(fourier.fourier_coefficients(samples, F))
+    np.testing.assert_allclose(got, target_coeffs, atol=1e-5)
+
+
+@pytest.mark.parametrize("radius,num_terms,tol", [
+    (2.0, 12, 2e-3),
+    (4.0, 18, 2e-3),
+    (8.0, 28, 2e-3),
+])
+def test_approx_error_matches_paper_fig3(radius, num_terms, tol):
+    """Paper Fig. 3: with F = 12/18/28 the error at radius 2/4/8 is ~1e-3."""
+    rng = np.random.default_rng(0)
+    ang = rng.uniform(0, 2 * np.pi, size=256)
+    x = jnp.asarray(radius * np.cos(ang), dtype=jnp.float32)
+    y = jnp.asarray(radius * np.sin(ang), dtype=jnp.float32)
+    theta = jnp.asarray(rng.uniform(0, 2 * np.pi, size=256), dtype=jnp.float32)
+    for which in ("x", "y"):
+        cos_a, sin_a = fourier.approx_cos_sin(x, y, theta, num_terms, which)
+        if which == "x":
+            u = x * jnp.cos(theta) + y * jnp.sin(theta)
+        else:
+            u = -x * jnp.sin(theta) + y * jnp.cos(theta)
+        err = np.maximum(np.abs(np.asarray(cos_a - jnp.cos(u))),
+                         np.abs(np.asarray(sin_a - jnp.sin(u))))
+        assert float(err.mean()) < tol, (which, float(err.mean()))
+
+
+def test_error_decreases_with_terms():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-4, 4, 64), dtype=jnp.float32)
+    y = jnp.asarray(rng.uniform(-4, 4, 64), dtype=jnp.float32)
+    theta = jnp.asarray(rng.uniform(0, 2 * np.pi, 64), dtype=jnp.float32)
+    u = x * jnp.cos(theta) + y * jnp.sin(theta)
+    errs = []
+    for F in (6, 12, 18, 24):
+        cos_a, _ = fourier.approx_cos_sin(x, y, theta, F, "x")
+        errs.append(float(jnp.mean(jnp.abs(cos_a - jnp.cos(u)))))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+    assert errs[3] < 1e-4

@@ -1,0 +1,210 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Sweeps shapes/dtypes and asserts allclose against ``repro.kernels.ref`` —
+the contract demanded for every Pallas kernel in this repo.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encodings
+from repro.kernels import ops, ref
+from repro.kernels.se2_project import se2_fourier_project
+
+
+def rand_qkv(rng, b, hq, hkv, sq, sk, d, dv=None, dtype=jnp.float32):
+    dv = dv or d
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype=dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dtype=dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, dv)), dtype=dtype)
+    return q, k, v
+
+
+def tol_for(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-4)
+
+
+SHAPE_SWEEP = [
+    # b, hq, hkv, sq, sk, d, dv, block
+    (1, 1, 1, 32, 32, 32, 32, 16),
+    (2, 4, 4, 64, 64, 64, 64, 32),
+    (1, 4, 2, 48, 80, 32, 32, 16),     # GQA + ragged (padding path)
+    (2, 8, 1, 33, 65, 16, 16, 16),     # MQA + unaligned seq lens
+    (1, 2, 2, 64, 64, 24, 40, 32),     # dv != d, unaligned head dims
+]
+
+
+@pytest.mark.parametrize("shape", SHAPE_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(shape, dtype):
+    b, hq, hkv, sq, sk, d, dv, blk = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    q, k, v = rand_qkv(rng, b, hq, hkv, sq, sk, d, dv, dtype)
+    got = ops.flash_attention(q, k, v, block_q=blk, block_k=blk,
+                              interpret=True)
+    want = ref.mha_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol_for(dtype))
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None),
+    (False, 24, None),
+    (True, 16, None),
+    (False, None, 30.0),
+    (True, None, 50.0),
+])
+def test_flash_mask_variants(causal, window, softcap):
+    rng = np.random.default_rng(0)
+    q, k, v = rand_qkv(rng, 2, 4, 2, 64, 64, 32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=16, block_k=16,
+                              interpret=True)
+    want = ref.mha_reference(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_flash_segment_ids():
+    rng = np.random.default_rng(1)
+    b, sq = 2, 64
+    q, k, v = rand_qkv(rng, b, 2, 2, sq, sq, 32)
+    seg = jnp.asarray(rng.integers(0, 3, size=(b, sq)), jnp.int32)
+    got = ops.flash_attention(q, k, v, q_segment_ids=seg, k_segment_ids=seg,
+                              block_q=16, block_k=16, interpret=True)
+    want = ref.mha_reference(q, k, v, q_segment_ids=seg, k_segment_ids=seg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_flash_gradients_match_ref():
+    """custom_vjp blocked backward vs autodiff through the O(S^2) oracle."""
+    rng = np.random.default_rng(2)
+    q, k, v = rand_qkv(rng, 1, 2, 1, 32, 48, 16)
+
+    def loss_flash(q, k, v):
+        o = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                                interpret=True)
+        return jnp.sum(o * jnp.cos(jnp.arange(o.size).reshape(o.shape) * 0.1))
+
+    def loss_ref(q, k, v):
+        o = ref.mha_reference(q, k, v, causal=True)
+        return jnp.sum(o * jnp.cos(jnp.arange(o.size).reshape(o.shape) * 0.1))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_flash_gradients_gqa_softcap():
+    rng = np.random.default_rng(3)
+    q, k, v = rand_qkv(rng, 1, 4, 2, 32, 32, 16)
+
+    def mk(fn):
+        def loss(q, k, v):
+            o = fn(q, k, v)
+            return jnp.sum(o ** 2)
+        return loss
+
+    flash = mk(lambda q, k, v: ops.flash_attention(
+        q, k, v, softcap=20.0, block_q=16, block_k=16, interpret=True))
+    oracle = mk(lambda q, k, v: ref.mha_reference(q, k, v, softcap=20.0))
+    g1 = jax.grad(flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(oracle, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("causal,window", [(False, None), (True, None),
+                                           (True, 32)])
+def test_chunked_matches_ref(causal, window):
+    rng = np.random.default_rng(4)
+    q, k, v = rand_qkv(rng, 2, 4, 2, 96, 96, 32)
+    got = ref.mha_chunked(q, k, v, causal=causal, window=window,
+                          chunk_size=32)
+    want = ref.mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_chunked_q_offset_decode():
+    """Decode semantics: queries are a suffix of the key sequence."""
+    rng = np.random.default_rng(5)
+    q, k, v = rand_qkv(rng, 1, 2, 2, 4, 64, 32)
+    got = ref.mha_chunked(q, k, v, causal=True, q_offset=60, chunk_size=16)
+    want = ref.mha_reference(q, k, v, causal=True, q_offset=60)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SE(2) Fourier projection kernel vs the encodings oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("head_dim,num_terms,tokens,block_t", [
+    (6, 8, 16, 8),
+    (12, 18, 100, 32),     # unaligned token count (padding path)
+    (24, 12, 64, 64),
+])
+@pytest.mark.parametrize("mode", ["q", "k"])
+def test_se2_project_matches_oracle(head_dim, num_terms, tokens, block_t, mode):
+    enc = encodings.SE2Fourier(head_dim=head_dim, num_terms=num_terms)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(tokens, head_dim)), dtype=jnp.float32)
+    pose = jnp.asarray(
+        np.concatenate([rng.uniform(-3, 3, (tokens, 2)),
+                        rng.uniform(-np.pi, np.pi, (tokens, 1))], -1),
+        dtype=jnp.float32)
+    got = se2_fourier_project(x, pose, enc, mode, block_t=block_t,
+                              interpret=True)
+    want = enc.transform_q(x, pose) if mode == "q" else enc.transform_k(x, pose)
+    assert got.shape == want.shape == (tokens, enc.expanded_dim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_se2_project_dtypes(dtype):
+    enc = encodings.SE2Fourier(head_dim=12, num_terms=10)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(32, 12)), dtype=dtype)
+    pose = jnp.asarray(rng.uniform(-2, 2, (32, 3)), dtype=jnp.float32)
+    got = se2_fourier_project(x, pose, enc, "k", block_t=16, interpret=True)
+    want = enc.transform_k(x, pose)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_then_se2_project_end_to_end():
+    """Alg. 2 with both Pallas kernels == quadratic oracle (Alg. 1)."""
+    from repro.core import attention as core_attn
+    enc = encodings.SE2Fourier(head_dim=12, num_terms=20)
+    rng = np.random.default_rng(8)
+    n = 32
+    q = jnp.asarray(rng.normal(size=(n, 12)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(n, 12)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, 12)), dtype=jnp.float32)
+    pose = jnp.asarray(
+        np.concatenate([rng.uniform(-2, 2, (n, 2)),
+                        rng.uniform(-np.pi, np.pi, (n, 1))], -1),
+        dtype=jnp.float32)
+    qt = se2_fourier_project(q, pose, enc, "q", block_t=16, interpret=True)
+    kt = se2_fourier_project(k, pose, enc, "k", block_t=16, interpret=True)
+    vt = se2_fourier_project(v, pose, enc, "k", block_t=16, interpret=True)
+    ot = ops.flash_attention(qt[None, None], kt[None, None], vt[None, None],
+                             scale=1.0 / np.sqrt(12), block_q=16, block_k=16,
+                             interpret=True)[0, 0]
+    out = enc.untransform_out(ot, pose)
+    want = core_attn.relative_attention_quadratic(enc, q, k, v, pose, pose)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-3, rtol=5e-3)

@@ -1,0 +1,91 @@
+"""Tests for launch-layer pure logic: roofline parsing, report, input specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.launch.mesh import HW
+from repro.launch.roofline import (CollectiveStats, model_flops_for,
+                                   parse_collectives, roofline_terms)
+
+HLO_SAMPLE = """
+HloModule jit_step
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %all-gather.2 = bf16[256,512]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %reduce-scatter.3 = f32[64]{0} reduce-scatter(%z), replica_groups=[32,8]<=[256], dimensions={0}
+  %all-to-all.4 = bf16[8,8]{1,0} all-to-all(%w), replica_groups=[16,16]<=[256]
+  %collective-permute.5 = f32[32]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %not-a-collective = f32[9999,9999]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_collectives_kinds_and_ring_factors():
+    st = parse_collectives(HLO_SAMPLE)
+    assert st.count == 5
+    # all-reduce: 2*(15/16)*16*128*4
+    ar = 2 * 15 / 16 * 16 * 128 * 4
+    assert abs(st.by_kind["all-reduce"] - ar) < 1e-6
+    # all-gather group=4: (3/4)*256*512*2
+    ag = 3 / 4 * 256 * 512 * 2
+    assert abs(st.by_kind["all-gather"] - ag) < 1e-6
+    # reduce-scatter group=8: 7 * 64 * 4
+    assert abs(st.by_kind["reduce-scatter"] - 7 * 64 * 4) < 1e-6
+    assert "collective-permute" in st.by_kind
+    # f32 split: ar + rs + permute are f32
+    assert st.f32_bytes > 0
+    assert st.bf16_corrected < st.per_chip_bytes
+
+
+def test_roofline_terms_dominance():
+    coll = CollectiveStats(per_chip_bytes=50e9, f32_bytes=0.0)
+    t = roofline_terms(1e12, 1e11, coll, 256, HW)
+    assert t["dominant"] == "collective"
+    assert abs(t["collective_s"] - 1.0) < 1e-6        # 50GB / 50GB/s
+    assert abs(t["compute_s"] - 1e12 / HW["peak_flops_bf16"]) < 1e-9
+    t2 = roofline_terms(1e15, 1e9, CollectiveStats(), 256, HW)
+    assert t2["dominant"] == "compute"
+
+
+def test_bf16_correction_halves_f32_share():
+    coll = CollectiveStats(per_chip_bytes=100.0, f32_bytes=60.0)
+    assert coll.bf16_corrected == 70.0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("stablelm-3b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    de = model_flops_for(cfg, SHAPES["decode_32k"])
+    # train: 6*N*B*S; decode: 2*N*B*1
+    assert tr / de == pytest.approx(
+        (6 * 256 * 4096) / (2 * 128), rel=1e-6)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    f = model_flops_for(cfg, SHAPES["train_4k"])
+    # active ~32B of 1.03T params
+    tokens = 256 * 4096
+    n_active = f / (6 * tokens)
+    assert 25e9 < n_active < 45e9, n_active
+
+
+def test_depth_variant_scan_iters_consistent():
+    """depth_variant(i).scan_iters() must be linear in i for every arch —
+    the precondition of the dry-run extrapolation."""
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        s2 = cfg.depth_variant(2).scan_iters()
+        s4 = cfg.depth_variant(4).scan_iters()
+        s3 = cfg.depth_variant(3).scan_iters()
+        assert s4 - s3 == s3 - s2 != 0, arch
+        assert cfg.scan_iters() >= s4, arch
+
+
+def test_reduced_configs_are_small():
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch).reduced()
+        from repro.nn import module as nnm
+        from repro.nn.transformer import build_model
+        n = nnm.count_params(build_model(cfg).specs())
+        assert n < 5e6, (arch, n)
