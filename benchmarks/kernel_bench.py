@@ -3,15 +3,19 @@ parity checks of the Pallas kernels.
 
 On this CPU host the Pallas kernels execute in interpret mode (Python), so
 their wall time is not meaningful; the benchmark therefore reports
-  * the XLA linear-memory attention path (what the CPU/dry-run actually
-    runs),
-  * the SE(2) Fourier projection in its fused-XLA form,
-and validates Pallas outputs against the oracle at benchmark shapes
-(the TPU-timing slot in the CSV is the integration point for real
+  * forward mode — the XLA linear-memory attention path (what the CPU/dry-run
+    actually runs) and the SE(2) Fourier projection in its fused-XLA form,
+  * backward mode — the same paths under ``jax.value_and_grad`` (full
+    train-step attention cost: forward + dq/dk/dv),
+and validates Pallas outputs AND gradients against the oracle at benchmark
+shapes (the TPU-timing slot in the CSV is the integration point for real
 hardware runs).
+
+Standalone: ``python benchmarks/kernel_bench.py [--mode fwd|bwd|all]``.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -33,13 +37,7 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(report):
-    rng = np.random.default_rng(0)
-    b, h, s, d = 1, 4, 1024, 64
-    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
-    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
-    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
-
+def _bench_fwd(report, q, k, v):
     chunked = jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="chunked",
                                                     causal=True))
     reference = jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="ref",
@@ -59,7 +57,41 @@ def run(report):
     report("kernels/flash_interpret_parity_maxerr", err)
     assert err < 1e-4, err
 
-    # SE(2) Fourier projection: fused-XLA timing + Pallas parity
+
+def _bench_bwd(report, q, k, v):
+    """Forward+backward timings and Pallas-backward gradient parity."""
+    def train_loss(impl):
+        def loss(q, k, v):
+            o = ops.attention(q, k, v, impl=impl, causal=True)
+            return jnp.sum(o.astype(jnp.float32) ** 2)
+        return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+
+    report("kernels/mha_chunked_1k_fwdbwd_us",
+           _time(train_loss("chunked"), q, k, v) * 1e6)
+    report("kernels/mha_reference_1k_fwdbwd_us",
+           _time(train_loss("ref"), q, k, v) * 1e6)
+
+    # gradient parity of the Pallas backward kernels (interpret mode)
+    # against autodiff through the O(S^2) oracle at a benchmark shape
+    qs = q[:, :, :256].astype(jnp.float32)
+    ks = k[:, :, :256].astype(jnp.float32)
+    vs = v[:, :, :256].astype(jnp.float32)
+    g = jnp.ones(qs.shape, jnp.float32)
+
+    def loss_flash(q, k, v):
+        o = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                                interpret=True, bwd_impl="pallas")
+        return jnp.sum(o * g)
+
+    got = jax.grad(loss_flash, argnums=(0, 1, 2))(qs, ks, vs)
+    want = ref.mha_grads_reference(qs, ks, vs, g, causal=True)
+    err = max(float(jnp.max(jnp.abs(a - w))) for a, w in zip(got, want))
+    report("kernels/flash_bwd_interpret_parity_maxerr", err)
+    assert err < 1e-4, err
+
+
+def _bench_se2(report):
+    rng = np.random.default_rng(0)
     enc = encodings.SE2Fourier(head_dim=24, num_terms=18)
     x = jnp.asarray(rng.normal(size=(2048, 24)), jnp.float32)
     pose = jnp.asarray(
@@ -76,5 +108,23 @@ def run(report):
     assert err < 1e-4, err
 
 
+def run(report, mode: str = "all"):
+    rng = np.random.default_rng(0)
+    b, h, s, d = 1, 4, 1024, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+
+    if mode in ("fwd", "all"):
+        _bench_fwd(report, q, k, v)
+        _bench_se2(report)
+    if mode in ("bwd", "all"):
+        _bench_bwd(report, q, k, v)
+
+
 if __name__ == "__main__":
-    run(lambda name, val, extra="": print(f"{name},{val},{extra}"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("fwd", "bwd", "all"), default="all")
+    args = ap.parse_args()
+    run(lambda name, val, extra="": print(f"{name},{val},{extra}"),
+        mode=args.mode)

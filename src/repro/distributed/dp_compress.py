@@ -64,7 +64,9 @@ def make_compressed_dp_step(loss_fn: Callable, optimizer, mesh: Mesh,
         loss = jax.lax.pmean(loss, data_axis)
         if have_pod:
             # 2) compressed cross-pod reduction (DCI) with error feedback
-            npods = jax.lax.axis_size(pod_axis)
+            # mesh.shape is static; jax.lax.axis_size is not available
+            # on all supported jax versions.
+            npods = mesh.shape[pod_axis]
             if compress:
                 def one(g, r):
                     target = g.astype(jnp.float32) + r

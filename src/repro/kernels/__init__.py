@@ -3,19 +3,27 @@
 The paper's central systems claim is that SE(2)-invariant attention can
 reuse an unmodified flash-attention kernel (Alg. 2). Accordingly:
 
-  * ``flash_attention``  — the Pallas TPU SDPA kernel the linear-memory
-    algorithm routes through (causal/window/softcap/segments/GQA).
-  * ``se2_project``      — fused SE(2) Fourier query/key projection
+  * ``flash_attention``      — the Pallas TPU SDPA forward kernel the
+    linear-memory algorithm routes through
+    (causal/window/softcap/segments/GQA); also emits the LSE rows.
+  * ``flash_attention_bwd``  — the FlashAttention-style backward kernels
+    (dq and dk/dv), recomputing probabilities from the saved LSE so
+    training is linear-memory on both sides of autodiff.
+  * ``se2_project``          — fused SE(2) Fourier query/key projection
     (the Alg. 2 pre-processing, which otherwise materializes ~8x-expanded
     intermediates in HBM).
-  * ``ops``              — padded, autodiff-capable public wrappers +
+  * ``ops``                  — padded, autodiff-capable public wrappers +
     implementation dispatcher used by the model stack.
-  * ``ref``              — pure-jnp oracles the kernels are validated
+  * ``ref``                  — pure-jnp oracles the kernels are validated
     against (and the linear-memory XLA fallback used on CPU/dry-run).
+
+See ``docs/kernels.md`` for the tiling and memory model.
 """
-from repro.kernels import flash_attention, ops, ref, se2_project
+from repro.kernels import (flash_attention, flash_attention_bwd, ops, ref,
+                           se2_project)
 from repro.kernels.ops import attention, flash_attention as flash_attention_op
 from repro.kernels.se2_project import se2_fourier_project
 
-__all__ = ["flash_attention", "ops", "ref", "se2_project", "attention",
-           "flash_attention_op", "se2_fourier_project"]
+__all__ = ["flash_attention", "flash_attention_bwd", "ops", "ref",
+           "se2_project", "attention", "flash_attention_op",
+           "se2_fourier_project"]

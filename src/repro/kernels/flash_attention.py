@@ -36,11 +36,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 _NEG_INF = -1e30
 
 
 def _fwd_kernel(q_seg_ref, k_seg_ref, q_time_ref, k_time_ref,
-                q_ref, k_ref, v_ref, o_ref,
+                q_ref, k_ref, v_ref, o_ref, lse_ref,
                 acc_ref, m_ref, l_ref, *,
                 scale: float, causal: bool, window: Optional[int],
                 softcap: Optional[float], block_q: int, block_k: int,
@@ -122,6 +124,7 @@ def _fwd_kernel(q_seg_ref, k_seg_ref, q_time_ref, k_time_ref,
     def _finalize():
         l = jnp.maximum(l_ref[:, 0], 1e-30)
         o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = m_ref[:, 0] + jnp.log(l)
 
 
 def flash_attention_fwd(q, k, v, *,
@@ -132,12 +135,14 @@ def flash_attention_fwd(q, k, v, *,
                         q_segment_ids=None, k_segment_ids=None,
                         q_times=None, k_times=None,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = False):
+                        interpret: bool = False,
+                        return_lse: bool = False):
     """Raw kernel invocation. Requires block-aligned sequence lengths.
 
     q: (B, Hq, Sq, D); k: (B, Hkv, Sk, D); v: (B, Hkv, Sk, Dv);
     segment ids / times: (B, S) int32 or None. Sq % block_q == 0 etc.
-    Returns (B, Hq, Sq, Dv) in v.dtype.
+    Returns (B, Hq, Sq, Dv) in v.dtype; with ``return_lse`` also the
+    float32 (B, Hq, Sq) log-sum-exp rows consumed by the backward kernels.
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, dv = v.shape
@@ -162,7 +167,7 @@ def flash_attention_fwd(q, k, v, *,
         softcap=softcap, block_q=block_q, block_k=block_k, num_k_blocks=nk,
         use_segments=use_segments, use_times=use_times)
 
-    return pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=(b, hq, nq, nk),
         in_specs=[
@@ -177,16 +182,24 @@ def flash_attention_fwd(q, k, v, *,
             pl.BlockSpec((1, 1, block_k, dv),
                          lambda b_, h, iq, ik: (b_, h // group, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, dv),
-                               lambda b_, h, iq, ik: (b_, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dv), v.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, dv),
+                         lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b_, h, iq, ik: (b_, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, dv), v.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q, dv), jnp.float32),    # acc
             pltpu.VMEM((block_q, 128), jnp.float32),   # m (running max)
             pltpu.VMEM((block_q, 128), jnp.float32),   # l (running denom)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
     )(q_segment_ids, k_segment_ids, q_times, k_times, q, k, v)
+    return (out, lse) if return_lse else out

@@ -3,30 +3,43 @@
 ``attention(...)`` is the single entry point the model stack uses; ``impl``
 selects between:
 
-  * ``"flash"``   — the Pallas TPU kernel (forward) + a linear-memory blocked
-    backward. On CPU the kernel runs in interpret mode (used by tests).
+  * ``"flash"``   — the Pallas TPU kernels, forward AND backward. On CPU the
+    kernels run in interpret mode (used by tests).
   * ``"chunked"`` — pure-XLA linear-memory online-softmax attention
     (``ref.mha_chunked``); the implementation lowered in the multi-pod
     dry-run, and the default on CPU where interpret-mode Pallas is slow.
   * ``"ref"``     — O(S^2) reference (small inputs / oracle).
 
 The flash path is wired with ``jax.custom_vjp``: the forward runs the Pallas
-kernel and also emits the log-sum-exp rows; the backward recomputes block
-logits chunk-by-chunk (classic FlashAttention recurrence) so training stays
-linear-memory end to end.
+kernel and saves its log-sum-exp rows; the backward dispatches on
+``bwd_impl``:
+
+  * ``"pallas"`` (default) — the FlashAttention-style Pallas backward kernels
+    (``repro.kernels.flash_attention_bwd``): a dq kernel and a dk/dv kernel,
+    both recomputing block probabilities from the saved LSE in VMEM.
+  * ``"xla"``    — the blocked-XLA recurrence (``_bwd_chunked``), kept as a
+    selectable fallback and as the gradient parity oracle.
+
+Either way training stays linear-memory end to end. The process-wide default
+can be overridden with the ``REPRO_FLASH_BWD`` environment variable.
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import flash_attention_bwd as fab
 from repro.kernels import ref
 
-_NEG_INF = -1e30
+#: Default backend for the flash-attention backward pass. ``"pallas"`` runs
+#: the Pallas kernels (interpret mode off-TPU); ``"xla"`` runs the blocked
+#: recurrence. Overridable per call via ``flash_attention(bwd_impl=...)``.
+DEFAULT_BWD_IMPL = os.environ.get("REPRO_FLASH_BWD", "pallas")
 
 
 def _default_interpret() -> bool:
@@ -45,22 +58,23 @@ def _pad_to(x, multiple, axis, value=0.0):
 
 
 # ---------------------------------------------------------------------------
-# Flash path: Pallas forward + blocked-XLA backward via custom_vjp.
+# Flash path: Pallas forward + Pallas (or blocked-XLA) backward, custom_vjp.
 # ---------------------------------------------------------------------------
 
-def _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times, *, causal,
-                      window, softcap, scale, block_q, block_k, interpret):
-    """Pad sequences to block multiples and head dims to lane multiples."""
+def _pad_all(q, k, v, q_seg, k_seg, q_times, k_times, *, block_q, block_k):
+    """Pad sequences to block multiples and head dims to lane multiples.
+
+    Zero-padding the qk contraction dim leaves scores unchanged; zero-padded
+    dv columns are sliced off by the caller. Padded key rows get segment id
+    -1 (always masked); padded query rows produce garbage rows that the
+    caller slices off (forward) or that contribute zero because the padded
+    cotangent is zero (backward).
+    """
     b, hq, sq, d = q.shape
     _, hkv, sk, dv = v.shape
-    if scale is None:
-        scale = 1.0 / float(d) ** 0.5
-    # Pad head dims to a multiple of 128 (MXU lane width); zero-padding the
-    # contraction dim leaves scores unchanged, zero-padding dv is sliced off.
     q, _ = _pad_to(q, 128, 3)
     k, _ = _pad_to(k, 128, 3)
     v, dv_pad = _pad_to(v, 128, 3)
-    # Pad sequence lengths to block multiples; padded keys get segment -1.
     need_seg = (sq % block_q != 0) or (sk % block_k != 0)
     if q_seg is None and need_seg:
         q_seg = jnp.zeros((b, sq), jnp.int32)
@@ -74,16 +88,62 @@ def _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times, *, causal,
     q, q_pad = _pad_to(q, block_q, 2)
     k, _ = _pad_to(k, block_k, 2)
     v, _ = _pad_to(v, block_k, 2)
-    out = fa.flash_attention_fwd(
+    return q, k, v, q_seg, k_seg, q_times, k_times, q_pad, dv_pad
+
+
+def _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times, *, causal,
+                      window, softcap, scale, block_q, block_k, interpret):
+    """Run the forward kernel on padded operands; returns (out, lse)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    q, k, v, q_seg, k_seg, q_times, k_times, q_pad, dv_pad = _pad_all(
+        q, k, v, q_seg, k_seg, q_times, k_times,
+        block_q=block_q, block_k=block_k)
+    out, lse = fa.flash_attention_fwd(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
         q_segment_ids=q_seg, k_segment_ids=k_seg,
         q_times=q_times, k_times=k_times,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        block_q=block_q, block_k=block_k, interpret=interpret,
+        return_lse=True)
     if q_pad:
         out = out[:, :, :sq, :]
+        lse = lse[:, :, :sq]
     if dv_pad:
         out = out[..., :dv]
-    return out
+    return out, lse
+
+
+def _bwd_pallas(saved, g, *, causal, window, softcap, scale, block_q,
+                block_k, interpret):
+    """Pallas backward: pad exactly like the forward, run the dq and dk/dv
+    kernels, slice the padding back off.
+
+    The cotangent (and hence ``delta``) is zero on padded query rows, which
+    zeroes their dk/dv contributions; padded key rows carry segment id -1 and
+    are masked out of dq.
+    """
+    q, k, v, o, lse, q_seg, k_seg, q_times, k_times = saved
+    b, hq, sq, d = q.shape
+    _, hkv, sk, dv = v.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    qp, kp, vp, q_seg, k_seg, q_times, k_times, _, _ = _pad_all(
+        q, k, v, q_seg, k_seg, q_times, k_times,
+        block_q=block_q, block_k=block_k)
+    gp, _ = _pad_to(g, 128, 3)
+    gp, _ = _pad_to(gp, block_q, 2)
+    op, _ = _pad_to(o, 128, 3)
+    op, _ = _pad_to(op, block_q, 2)
+    lsep, _ = _pad_to(lse, block_q, 2)
+    dq, dk, dv_grad = fab.flash_attention_bwd(
+        qp, kp, vp, op, lsep, gp, causal=causal, window=window,
+        softcap=softcap, scale=scale,
+        q_segment_ids=q_seg, k_segment_ids=k_seg,
+        q_times=q_times, k_times=k_times,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return (dq[:, :, :sq, :d], dk[:, :, :sk, :d], dv_grad[:, :, :sk, :dv])
 
 
 def _bwd_chunked(saved, g, *, causal, window, softcap, scale, chunk_size=512):
@@ -171,93 +231,43 @@ def _bwd_chunked(saved, g, *, causal, window, softcap, scale, chunk_size=512):
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(7, 8, 9, 10, 11, 12, 13, 14))
 def _flash(q, k, v, q_seg, k_seg, q_times, k_times, causal, window, softcap,
-           scale, block_q, block_k, interpret):
-    return _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times,
-                             causal=causal, window=window, softcap=softcap,
-                             scale=scale, block_q=block_q, block_k=block_k,
-                             interpret=interpret)
+           scale, block_q, block_k, interpret, bwd_impl):
+    out, _ = _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times,
+                               causal=causal, window=window, softcap=softcap,
+                               scale=scale, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return out
 
 
 def _flash_fwd_rule(q, k, v, q_seg, k_seg, q_times, k_times, causal, window,
-                    softcap, scale, block_q, block_k, interpret):
-    out = _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times,
-                            causal=causal, window=window, softcap=softcap,
-                            scale=scale, block_q=block_q, block_k=block_k,
-                            interpret=interpret)
-    # LSE for the backward is recomputed cheaply from the chunked recurrence;
-    # we recover it from the forward pieces instead of plumbing a second
-    # kernel output: lse rows are re-derived in the backward's first pass.
-    lse = _lse_chunked(q, k, q_seg, k_seg, q_times, k_times, causal=causal,
-                       window=window, softcap=softcap, scale=scale)
+                    softcap, scale, block_q, block_k, interpret, bwd_impl):
+    # The forward kernel emits its log-sum-exp rows as a second output; the
+    # backward recomputes block probabilities from them, so the residuals are
+    # all O(S): no (Sq, Sk) tensor is ever saved.
+    out, lse = _flash_fwd_padded(q, k, v, q_seg, k_seg, q_times, k_times,
+                                 causal=causal, window=window,
+                                 softcap=softcap, scale=scale,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
     return out, (q, k, v, out, lse, q_seg, k_seg, q_times, k_times)
 
 
-def _lse_chunked(q, k, q_seg, k_seg, q_times=None, k_times=None, *, causal,
-                 window, softcap, scale, chunk_size=512):
-    """Row log-sum-exp of the (masked, scaled, capped) logits, O(Sq) memory."""
-    b, hq, sq, d = q.shape
-    _, hkv, sk, _ = k.shape
-    group = hq // hkv
-    if scale is None:
-        scale = 1.0 / float(d) ** 0.5
-    if sk % chunk_size != 0:
-        pad = chunk_size - sk % chunk_size
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        if k_seg is None:
-            k_seg = jnp.zeros((b, sk), jnp.int32)
-            q_seg = jnp.zeros((b, sq), jnp.int32)
-        k_seg = jnp.pad(k_seg, ((0, 0), (0, pad)), constant_values=-1)
-        if k_times is not None:
-            k_times = jnp.pad(k_times, ((0, 0), (0, pad)))
-    n_chunks = k.shape[2] // chunk_size
-    qf = q.astype(jnp.float32)
-
-    def body(carry, idx):
-        m, l = carry
-        start = idx * chunk_size
-        kc = jax.lax.dynamic_slice_in_dim(k, start, chunk_size, 2)
-        kc = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
-        s = jnp.einsum("bhnd,bhmd->bhnm", qf, kc) * scale
-        if softcap is not None and softcap > 0:
-            s = jnp.tanh(s / softcap) * softcap
-        if q_times is not None:
-            rows = q_times[:, :, None]
-            cols = jax.lax.dynamic_slice_in_dim(
-                k_times, start, chunk_size, 1)[:, None, :]
-            mask = jnp.ones((b, sq, chunk_size), bool)
-        else:
-            rows = jax.lax.broadcasted_iota(
-                jnp.int32, (sq, chunk_size), 0)[None]
-            cols = (jax.lax.broadcasted_iota(
-                jnp.int32, (sq, chunk_size), 1) + start)[None]
-            mask = jnp.ones((1, sq, chunk_size), bool)
-        if causal:
-            mask = mask & (cols <= rows)
-        if window is not None:
-            mask = mask & (cols > rows - window)
-        mask = mask[:, None]
-        if q_seg is not None:
-            ks = jax.lax.dynamic_slice_in_dim(k_seg, start, chunk_size, 1)
-            seg = (q_seg[:, :, None] == ks[:, None, :]) & (ks[:, None, :] >= 0)
-            mask = mask & seg[:, None]
-        s = jnp.where(mask, s, _NEG_INF)
-        m_new = jnp.maximum(m, s.max(-1))
-        l_new = l * jnp.exp(m - m_new) + jnp.where(
-            mask, jnp.exp(s - m_new[..., None]), 0.0).sum(-1)
-        return (m_new, l_new), None
-
-    m0 = jnp.full((b, hq, sq), _NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, hq, sq), jnp.float32)
-    (m, l), _ = jax.lax.scan(body, (m0, l0), jnp.arange(n_chunks))
-    return m + jnp.log(jnp.maximum(l, 1e-30))
-
-
 def _flash_bwd_rule(causal, window, softcap, scale, block_q, block_k,
-                    interpret, saved, g):
-    dq, dk, dv = _bwd_chunked(saved, g, causal=causal, window=window,
-                              softcap=softcap, scale=scale)
+                    interpret, bwd_impl, saved, g):
+    if bwd_impl == "pallas":
+        dq, dk, dv = _bwd_pallas(saved, g, causal=causal, window=window,
+                                 softcap=softcap, scale=scale,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    elif bwd_impl == "xla":
+        dq, dk, dv = _bwd_chunked(saved, g, causal=causal, window=window,
+                                  softcap=softcap, scale=scale)
+    else:
+        raise ValueError(f"unknown bwd_impl {bwd_impl!r} "
+                         "(expected 'pallas' or 'xla')")
     return dq, dk, dv, None, None, None, None
 
 
@@ -271,12 +281,22 @@ def flash_attention(q, k, v, *, causal: bool = False,
                     q_segment_ids=None, k_segment_ids=None,
                     q_times=None, k_times=None,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: Optional[bool] = None):
-    """Differentiable flash attention (Pallas fwd, blocked-XLA bwd)."""
+                    interpret: Optional[bool] = None,
+                    bwd_impl: Optional[str] = None):
+    """Differentiable flash attention (Pallas forward and backward).
+
+    ``bwd_impl`` selects the backward backend: ``"pallas"`` (default; the
+    FlashAttention-style dq and dk/dv kernels) or ``"xla"`` (the blocked
+    recurrence — the fallback and parity oracle). The default comes from
+    ``DEFAULT_BWD_IMPL`` / the ``REPRO_FLASH_BWD`` environment variable.
+    """
     if interpret is None:
         interpret = _default_interpret()
+    if bwd_impl is None:
+        bwd_impl = DEFAULT_BWD_IMPL
     return _flash(q, k, v, q_segment_ids, k_segment_ids, q_times, k_times,
-                  causal, window, softcap, scale, block_q, block_k, interpret)
+                  causal, window, softcap, scale, block_q, block_k, interpret,
+                  bwd_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -290,13 +310,15 @@ def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
               q_times=None, k_times=None,
               q_offset: int = 0,
               block_q: int = 128, block_k: int = 128,
-              chunk_size: Optional[int] = None):
+              chunk_size: Optional[int] = None,
+              bwd_impl: Optional[str] = None):
     """Multi-head attention with selectable implementation.
 
     ``impl="auto"`` picks flash on TPU and the chunked XLA path elsewhere.
     ``q_offset`` (chunked/ref only) offsets query positions for decode.
     ``q_times/k_times``: block-causal over explicit per-token times
-    (agent-simulation scenes).
+    (agent-simulation scenes). ``bwd_impl`` (flash only) selects the
+    backward backend, see :func:`flash_attention`.
     """
     if impl == "auto":
         impl = "flash" if jax.default_backend() == "tpu" else "chunked"
@@ -311,7 +333,8 @@ def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
                                q_segment_ids=q_segment_ids,
                                k_segment_ids=k_segment_ids,
                                q_times=q_times, k_times=k_times,
-                               block_q=block_q, block_k=block_k)
+                               block_q=block_q, block_k=block_k,
+                               bwd_impl=bwd_impl)
     if impl == "chunked":
         return ref.mha_chunked(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale,

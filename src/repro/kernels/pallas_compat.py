@@ -1,0 +1,14 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` across
+jax releases; every kernel in this package resolves the name through here so
+the kernels import (and run in interpret mode) on either side of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -121,6 +121,50 @@ def mha_reference(q, k, v, *, causal: bool = False,
     return jnp.einsum("bhnm,bhmd->bhnd", p, v.astype(jnp.float32)).astype(v.dtype)
 
 
+def lse_reference(q, k, *, causal: bool = False,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None,
+                  q_segment_ids=None, k_segment_ids=None,
+                  q_times=None, k_times=None):
+    """O(S^2) row log-sum-exp oracle for the forward kernel's lse output.
+
+    Returns float32 ``(B, Hq, Sq)``. Fully-masked rows evaluate to
+    ``log(1e-30)``-ish garbage in both implementations; compare only over
+    rows with at least one valid key.
+    """
+    b, hq, sq, d = q.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    k = _repeat_kv(k, hq)
+    s = jnp.einsum("bhnd,bhmd->bhnm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _maybe_softcap(s, softcap)
+    mask = build_mask(sq, k.shape[2], causal=causal, window=window,
+                      q_times=q_times, k_times=k_times)
+    mask = mask[:, None] if q_times is not None else mask[None, None]
+    if q_segment_ids is not None:
+        seg = build_mask(sq, k.shape[2], q_segment_ids=q_segment_ids,
+                         k_segment_ids=k_segment_ids)
+        mask = mask & seg[:, None]
+    s = jnp.where(mask, s, _NEG_INF)
+    return jax.scipy.special.logsumexp(s, axis=-1)
+
+
+def mha_grads_reference(q, k, v, g, **kwargs):
+    """Gradient oracle: (dq, dk, dv) via autodiff through ``mha_reference``.
+
+    ``g`` is the output cotangent, shaped like the attention output. Every
+    kwarg of :func:`mha_reference` is accepted. This is the ground truth the
+    Pallas backward kernels (and the blocked-XLA backward) are tested
+    against.
+    """
+    def loss(q, k, v):
+        return jnp.sum(mha_reference(q, k, v, **kwargs)
+                       * g.astype(jnp.float32))
+    return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+
 def auto_chunk(sk: int, max_chunks: int = 64, base: int = 512) -> int:
     """Chunk size capping the scan trip count (dry-run accuracy: unrolled
     chunk loops must stay small enough to lower)."""
