@@ -70,6 +70,17 @@ class GroupEncoding:
         """c — feature dim after phi_q^T / phi_k (equals head_dim for RoPE)."""
         return self.head_dim
 
+    @property
+    def expanded_v_dim(self) -> int:
+        """Feature dim of a cached value row: ``expanded_dim`` when phi acts
+        on values (phi_k-transformed values are what gets cached), else the
+        raw head_dim. KV caches sized off this never need re-projection —
+        ``transform_k``/``transform_v`` depend only on the token's own pose,
+        so a cached row stays valid as the scene grows (the factorization
+        property that makes incremental SE(2)-invariant decode sound; see
+        docs/rollout.md)."""
+        return self.expanded_dim if self.transforms_values else self.head_dim
+
     # --- Algorithm 2 (linear memory) ------------------------------------
     def transform_q(self, q, pose):
         return q

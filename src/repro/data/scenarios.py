@@ -17,7 +17,11 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-DT = 0.5  # seconds per simulation step
+DT = 0.5          # seconds per simulation step
+MAX_SPEED = 25.0  # m/s clamp in the unicycle integrator
+# NOTE: repro.runtime.rollout.step_kinematics is the jnp mirror of
+# step_kinematics below (the engine needs it jit-able on device); both
+# must integrate identically — tests/test_decode.py pins the parity.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +65,7 @@ def decode_action(cfg: ScenarioConfig, action_id):
 
 def step_kinematics(pose, speed, accel, yaw_rate, dt: float = DT):
     """Unicycle integration; pose (..., 3), returns (new_pose, new_speed)."""
-    speed_new = np.clip(speed + accel * dt, 0.0, 25.0)
+    speed_new = np.clip(speed + accel * dt, 0.0, MAX_SPEED)
     theta_new = pose[..., 2] + yaw_rate * dt
     mid_speed = 0.5 * (speed + speed_new)
     x = pose[..., 0] + mid_speed * np.cos(theta_new) * dt

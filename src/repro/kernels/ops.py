@@ -57,6 +57,44 @@ def _pad_to(x, multiple, axis, value=0.0):
     return jnp.pad(x, widths, constant_values=value), pad
 
 
+def _decode_block_q(sq: int, block_q: int) -> int:
+    """Shrink the query block for small-q (decode) calls.
+
+    A decode step has q_len in the single digits; padding it to the default
+    128-row block wastes ~99% of the MXU work. 16 sublanes is the minimum
+    tile for every supported dtype (f32 needs 8, bf16 needs 16), so round
+    the query length up to a multiple of 16 and never exceed the caller's
+    block_q.
+    """
+    if sq >= block_q:
+        return block_q
+    return max(16, -(-sq // 16) * 16)
+
+
+def _fold_kv_length(kv_length, q_seg, k_seg, b, sq, sk):
+    """Fold decode-cursor masking into the segment-id machinery.
+
+    Key positions at or beyond ``kv_length`` (scalar or per-row ``(B,)``
+    cursors) get segment id -1, which the kernel's segment mask always
+    rejects — the same mechanism that hides padded key rows. This reuses
+    the existing kernel feature set instead of threading another operand
+    through the Pallas call (and through the custom_vjp residuals).
+    """
+    kvl = jnp.asarray(kv_length, jnp.int32)
+    if kvl.ndim == 0:
+        kvl = jnp.broadcast_to(kvl[None], (b,))
+    live = jnp.arange(sk, dtype=jnp.int32)[None, :] < kvl[:, None]  # (B, Sk)
+    # Materialize BOTH sides: the kernel enables its segment mask off
+    # q_segment_ids alone, and a caller may legitimately pass either side
+    # without the other (e.g. cache-side ids with all-valid queries).
+    if q_seg is None:
+        q_seg = jnp.zeros((b, sq), jnp.int32)
+    if k_seg is None:
+        k_seg = jnp.zeros((b, sk), jnp.int32)
+    k_seg = jnp.where(live, k_seg, -1)
+    return q_seg, k_seg
+
+
 # ---------------------------------------------------------------------------
 # Flash path: Pallas forward + Pallas (or blocked-XLA) backward, custom_vjp.
 # ---------------------------------------------------------------------------
@@ -280,6 +318,7 @@ def flash_attention(q, k, v, *, causal: bool = False,
                     scale: Optional[float] = None,
                     q_segment_ids=None, k_segment_ids=None,
                     q_times=None, k_times=None,
+                    kv_length=None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: Optional[bool] = None,
                     bwd_impl: Optional[str] = None):
@@ -289,11 +328,23 @@ def flash_attention(q, k, v, *, causal: bool = False,
     FlashAttention-style dq and dk/dv kernels) or ``"xla"`` (the blocked
     recurrence — the fallback and parity oracle). The default comes from
     ``DEFAULT_BWD_IMPL`` / the ``REPRO_FLASH_BWD`` environment variable.
+
+    ``kv_length`` (scalar or per-row ``(B,)`` decode cursors) masks key
+    positions at or beyond it — the incremental-decode path where ``k``/``v``
+    are preallocated caches only partially written. It is folded into the
+    segment-id mask, so it composes with every other feature. Small-q calls
+    (``q_len < block_q``, the decode shape) automatically shrink the query
+    block to the minimum legal tile instead of padding to 128 rows.
     """
     if interpret is None:
         interpret = _default_interpret()
     if bwd_impl is None:
         bwd_impl = DEFAULT_BWD_IMPL
+    block_q = _decode_block_q(q.shape[2], block_q)
+    if kv_length is not None:
+        q_segment_ids, k_segment_ids = _fold_kv_length(
+            kv_length, q_segment_ids, k_segment_ids,
+            q.shape[0], q.shape[2], k.shape[2])
     return _flash(q, k, v, q_segment_ids, k_segment_ids, q_times, k_times,
                   causal, window, softcap, scale, block_q, block_k, interpret,
                   bwd_impl)
@@ -309,6 +360,7 @@ def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
               q_segment_ids=None, k_segment_ids=None,
               q_times=None, k_times=None,
               q_offset: int = 0,
+              kv_length=None,
               block_q: int = 128, block_k: int = 128,
               chunk_size: Optional[int] = None,
               bwd_impl: Optional[str] = None):
@@ -317,8 +369,10 @@ def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
     ``impl="auto"`` picks flash on TPU and the chunked XLA path elsewhere.
     ``q_offset`` (chunked/ref only) offsets query positions for decode.
     ``q_times/k_times``: block-causal over explicit per-token times
-    (agent-simulation scenes). ``bwd_impl`` (flash only) selects the
-    backward backend, see :func:`flash_attention`.
+    (agent-simulation scenes). ``kv_length`` (all impls; scalar or per-row
+    ``(B,)`` cursors) masks cache rows at or beyond the decode cursor —
+    the incremental-decode path over preallocated K/V caches. ``bwd_impl``
+    (flash only) selects the backward backend, see :func:`flash_attention`.
     """
     if impl == "auto":
         impl = "flash" if jax.default_backend() == "tpu" else "chunked"
@@ -333,6 +387,7 @@ def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
                                q_segment_ids=q_segment_ids,
                                k_segment_ids=k_segment_ids,
                                q_times=q_times, k_times=k_times,
+                               kv_length=kv_length,
                                block_q=block_q, block_k=block_k,
                                bwd_impl=bwd_impl)
     if impl == "chunked":
@@ -341,13 +396,13 @@ def attention(q, k, v, *, impl: str = "auto", causal: bool = False,
                                q_segment_ids=q_segment_ids,
                                k_segment_ids=k_segment_ids,
                                q_times=q_times, k_times=k_times,
-                               q_offset=q_offset, chunk_size=chunk_size,
-                               unroll=unroll)
+                               q_offset=q_offset, kv_length=kv_length,
+                               chunk_size=chunk_size, unroll=unroll)
     if impl == "ref":
         return ref.mha_reference(q, k, v, causal=causal, window=window,
                                  softcap=softcap, scale=scale,
                                  q_segment_ids=q_segment_ids,
                                  k_segment_ids=k_segment_ids,
                                  q_times=q_times, k_times=k_times,
-                                 q_offset=q_offset)
+                                 q_offset=q_offset, kv_length=kv_length)
     raise ValueError(f"unknown attention impl {impl!r}")

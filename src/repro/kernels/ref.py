@@ -23,6 +23,21 @@ def _length_mask(shape, kv_len):
     return cols < kv_len
 
 
+def _kv_length_mask(kv_length, sk):
+    """(B, 1, 1, Sk) bool mask of live cache rows given per-row cursors.
+
+    ``kv_length`` is a scalar or a ``(B,)`` vector of decode cursors: key
+    positions ``>= kv_length[b]`` are unwritten cache slots and must never
+    be attended. This is the cursor-based masking used by the incremental
+    decode path (queries are new tokens, keys are a preallocated cache).
+    """
+    kvl = jnp.asarray(kv_length, jnp.int32)
+    if kvl.ndim == 0:
+        kvl = kvl[None]
+    live = jnp.arange(sk, dtype=jnp.int32)[None, :] < kvl[:, None]  # (B, Sk)
+    return live[:, None, None, :]
+
+
 def build_mask(sq: int, sk: int, *, causal: bool = False,
                window: Optional[int] = None,
                q_segment_ids=None, k_segment_ids=None,
@@ -76,12 +91,17 @@ def mha_reference(q, k, v, *, causal: bool = False,
                   scale: Optional[float] = None,
                   q_segment_ids=None, k_segment_ids=None,
                   q_times=None, k_times=None,
-                  q_offset: int = 0):
+                  q_offset: int = 0,
+                  kv_length=None):
     """O(S^2)-memory multi-head attention oracle.
 
     Shapes: q ``(B, Hq, Sq, Dqk)``; k ``(B, Hkv, Sk, Dqk)``;
     v ``(B, Hkv, Sk, Dv)``. Hkv must divide Hq (GQA/MQA). Returns
     ``(B, Hq, Sq, Dv)``.
+
+    ``kv_length`` (scalar or ``(B,)`` int) is the decode-cursor mask: key
+    positions at or beyond it are treated as unwritten cache rows and
+    masked out regardless of the other mask terms.
     """
     b, hq, sq, d = q.shape
     if scale is None:
@@ -113,6 +133,8 @@ def mha_reference(q, k, v, *, causal: bool = False,
         seg = build_mask(sq, k.shape[2], q_segment_ids=q_segment_ids,
                          k_segment_ids=k_segment_ids)
         mask = mask & seg[:, None]
+    if kv_length is not None:
+        mask = mask & _kv_length_mask(kv_length, k.shape[2])
     s = jnp.where(mask, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     # fully-masked rows produce uniform p over -inf logits -> force zeros
@@ -181,6 +203,7 @@ def mha_chunked(q, k, v, *, causal: bool = False,
                 q_segment_ids=None, k_segment_ids=None,
                 q_times=None, k_times=None,
                 q_offset: int = 0,
+                kv_length=None,
                 chunk_size: Optional[int] = None,
                 unroll: bool = False):
     """Linear-memory attention in pure XLA: online softmax over KV chunks.
@@ -212,6 +235,11 @@ def mha_chunked(q, k, v, *, causal: bool = False,
     n_chunks = sk_p // chunk_size
     group = hq // hkv
     qf = q.astype(jnp.float32)
+    kvl = None
+    if kv_length is not None:
+        kvl = jnp.asarray(kv_length, jnp.int32)
+        if kvl.ndim == 0:
+            kvl = kvl[None]
 
     def body(carry, idx):
         m, l, acc = carry
@@ -250,6 +278,10 @@ def mha_chunked(q, k, v, *, causal: bool = False,
             seg = (q_segment_ids[:, :, None] == ks[:, None, :]) & (
                 ks[:, None, :] >= 0)
             mask = mask & seg[:, None]
+        if kvl is not None:
+            live = (jax.lax.broadcasted_iota(jnp.int32, (1, chunk_size), 1)
+                    + start) < kvl[:, None]
+            mask = mask & live[:, None, None, :]
         s = jnp.where(mask, s, _NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)

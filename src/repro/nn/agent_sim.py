@@ -63,6 +63,17 @@ class AgentSimConfig:
         return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
 
 
+def _scatter_rows(buf, new, cursor):
+    """Write ``new`` rows into ``buf`` at per-row cursors along the length
+    axis: buf (B, S, ...) or (B, H, S, ...), new the matching (B, n, ...) /
+    (B, H, n, ...), cursor (B,) int32. The caller guarantees
+    cursor + n <= S (dynamic_update_slice clamps, it does not wrap)."""
+    axis = 1 if buf.ndim == 2 else buf.ndim - 2    # length axis of buf
+    return jax.vmap(
+        lambda b_, u, i: jax.lax.dynamic_update_slice_in_dim(
+            b_, u, i, axis=axis - 1))(buf, new, cursor)
+
+
 def build_sim_encoding(cfg: AgentSimConfig) -> Optional[GroupEncoding]:
     if cfg.encoding == "absolute":
         return None
@@ -78,7 +89,21 @@ def build_sim_encoding(cfg: AgentSimConfig) -> Optional[GroupEncoding]:
 
 
 class SimAttention:
-    """Relative attention over scene tokens (Alg. 2 around the SDPA kernel)."""
+    """Relative attention over scene tokens (Alg. 2 around the SDPA kernel).
+
+    Attention is **block-causal over times** (``causal=True`` with explicit
+    per-token times): a token at simulation step t attends tokens at steps
+    <= t, and tokens sharing a step attend each other bidirectionally. This
+    is not just the autoregressive training mask — it is what makes the
+    incremental decode cache sound: a token's attention output can never
+    change when later tokens arrive, so per-layer K/V rows written once
+    stay valid for the rest of the rollout.
+
+    The cached rows are the *encoding-transformed* keys/values
+    ``k~ = phi_k(p_m) k`` / ``v~ = phi_k(p_m) v``: the paper's per-token
+    factorization means they depend only on the token's own pose, never on
+    the (growing) rest of the scene — see ``docs/rollout.md``.
+    """
 
     def __init__(self, cfg: AgentSimConfig):
         self.cfg = cfg
@@ -94,28 +119,81 @@ class SimAttention:
     def specs(self):
         return {k: p.specs() for k, p in self.projs.items()}
 
-    def __call__(self, params, x, pose, times, segment_ids):
+    @property
+    def cache_dims(self) -> Tuple[int, int]:
+        """(key_dim, value_dim) of one cached row (post-transform)."""
+        if self.enc is None:
+            return self.cfg.head_dim, self.cfg.head_dim
+        return self.enc.expanded_dim, self.enc.expanded_v_dim
+
+    def _qkv(self, params, x, pose):
+        """Project new tokens and apply the per-token encoding transforms.
+
+        Returns (q~, k~, v~), each (B, H, n, ·) — exactly the rows a cache
+        stores. Everything here depends only on each token's own features
+        and pose: the factorization that legitimizes caching.
+        """
         cfg = self.cfg
         h, hd = cfg.num_heads, cfg.head_dim
         q = _split_heads(self.projs["q"](params["q"], x), h, hd)
         k = _split_heads(self.projs["k"](params["k"], x), h, hd)
         v = _split_heads(self.projs["v"](params["v"], x), h, hd)
-        scale = 1.0 / float(hd) ** 0.5
         if self.enc is not None:
-            p4 = pose[:, None]                       # (B, 1, S, 3)
+            p4 = pose[:, None]                       # (B, 1, n, 3)
             if self.enc.pose_dim == 2:
                 p4 = p4[..., :2]
             q = self.enc.transform_q(q, p4)
             k = self.enc.transform_k(k, p4)
             if self.enc.transforms_values:
                 v = self.enc.transform_v(v, p4)
-        out = kops.attention(q, k, v, impl=cfg.attn_impl, scale=scale,
-                             q_times=times, k_times=times,
-                             q_segment_ids=segment_ids,
-                             k_segment_ids=segment_ids)
+        return q, k, v
+
+    def _finish(self, params, out, pose):
         if self.enc is not None and self.enc.transforms_values:
             out = self.enc.untransform_out(out, pose[:, None])
         return self.projs["o"](params["o"], _merge_heads(out))
+
+    def __call__(self, params, x, pose, times, segment_ids):
+        cfg = self.cfg
+        q, k, v = self._qkv(params, x, pose)
+        scale = 1.0 / float(cfg.head_dim) ** 0.5
+        out = kops.attention(q, k, v, impl=cfg.attn_impl, scale=scale,
+                             causal=True,
+                             q_times=times, k_times=times,
+                             q_segment_ids=segment_ids,
+                             k_segment_ids=segment_ids)
+        return self._finish(params, out, pose)
+
+    def decode_step(self, params, x, pose, times, segment_ids,
+                    k_cache, v_cache, cache_times, cache_seg, cursor):
+        """Incremental decode: attend ``n`` new tokens over the cache.
+
+        x (B, n, d_model); pose (B, n, 3) *encoder-scaled*; times (B, n);
+        segment_ids (B, n); k_cache (B, H, S_max, c); v_cache
+        (B, H, S_max, cv); cache_times / cache_seg (B, S_max) **already
+        updated** with the new tokens' rows (they are layer-independent, so
+        the model writes them once); cursor (B,) — rows written *before*
+        this call. Returns (out (B, n, d_model), k_cache', v_cache').
+
+        New rows are written at [cursor, cursor + n); the query attends the
+        cache with the same block-causal times + segment mask as the full
+        forward, plus cursor masking (``kv_length = cursor + n``) so
+        never-written slots are unreachable even where ``cache_seg`` has
+        been scribbled on by a retired scene.
+        """
+        cfg = self.cfg
+        n = x.shape[1]
+        q, k_new, v_new = self._qkv(params, x, pose)
+        k_cache = _scatter_rows(k_cache, k_new.astype(k_cache.dtype), cursor)
+        v_cache = _scatter_rows(v_cache, v_new.astype(v_cache.dtype), cursor)
+        scale = 1.0 / float(cfg.head_dim) ** 0.5
+        out = kops.attention(q, k_cache, v_cache, impl=cfg.attn_impl,
+                             scale=scale, causal=True,
+                             q_times=times, k_times=cache_times,
+                             q_segment_ids=segment_ids,
+                             k_segment_ids=cache_seg,
+                             kv_length=cursor + n)
+        return self._finish(params, out, pose), k_cache, v_cache
 
 
 class AgentSimModel:
@@ -216,6 +294,114 @@ class AgentSimModel:
         logits = self.head(params["head"], x[:, m:])
         return logits.reshape(b, t, a, cfg.num_actions), jnp.zeros(
             (), jnp.float32)
+
+    # -- incremental decode ---------------------------------------------------
+    #
+    # The per-token factorization (encodings.GroupEncoding) means a cached
+    # k~/v~ row depends only on that token's own features and pose, and the
+    # block-causal times mask means a token's output never changes as the
+    # scene grows — so `prefill` + repeated `step` reproduces `__call__`'s
+    # logits exactly (tests/test_decode.py) at O(T) instead of O(T^2) work
+    # per rollout step. See docs/rollout.md for the soundness argument.
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=None):
+        """Preallocate the decode cache for ``batch_size`` scene slots.
+
+        Layout: per-layer transformed keys/values stacked on a leading layer
+        axis (the block parameters are scanned, so the cache scans too),
+        plus layer-independent times / segment ids / per-slot cursors.
+        Segment ids start at -1, so unwritten rows are always masked.
+        """
+        cfg = self.cfg
+        if dtype is None:
+            dtype = cfg.compute_dtype
+        ck, cv = self.attn.cache_dims
+        l, b, h, s = cfg.num_layers, batch_size, cfg.num_heads, max_len
+        return {
+            "k": jnp.zeros((l, b, h, s, ck), dtype),
+            "v": jnp.zeros((l, b, h, s, cv), dtype),
+            "times": jnp.zeros((b, s), jnp.int32),
+            "seg": jnp.full((b, s), -1, jnp.int32),
+            "cursor": jnp.zeros((b,), jnp.int32),
+        }
+
+    def _extend(self, params, cache, x, pose, times, segment_ids):
+        """Feed ``n`` new tokens through every layer against the cache.
+
+        x (B, n, d_model) embedded tokens; pose (B, n, 3) raw world poses;
+        times/segment_ids (B, n). Returns (logits (B, n, A), new cache).
+        Used for both prefill (n = whole history) and rollout steps (n =
+        num_agents): the mask semantics are identical, so prefill is just a
+        big first step.
+        """
+        cfg = self.cfg
+        n = x.shape[1]
+        cursor = cache["cursor"]
+        enc_pose = pose.astype(jnp.float32) * jnp.asarray(
+            [cfg.pos_scale, cfg.pos_scale, 1.0], jnp.float32)
+        cache_times = _scatter_rows(cache["times"], times, cursor)
+        cache_seg = _scatter_rows(cache["seg"], segment_ids, cursor)
+
+        def body(x, layer):
+            lp, kc, vc = layer
+            h = self.norm1(lp["norm1"], x)
+            attn_out, kc, vc = self.attn.decode_step(
+                lp["attn"], h, enc_pose, times, segment_ids,
+                kc, vc, cache_times, cache_seg, cursor)
+            x = x + attn_out
+            h = self.norm2(lp["norm2"], x)
+            x = x + self.mlp(lp["mlp"], h)
+            return x, (kc, vc)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        x = self.final_norm(params["final_norm"], x)
+        logits = self.head(params["head"], x)
+        new_cache = {"k": new_k, "v": new_v, "times": cache_times,
+                     "seg": cache_seg, "cursor": cursor + n}
+        return logits, new_cache
+
+    def prefill(self, params, cache, batch):
+        """Write a scene's map + agent history into the cache.
+
+        ``batch`` has the ``__call__`` layout with T = history length.
+        Returns (logits (B, T, A, num_actions) for the history's agent
+        tokens, updated cache). Requires max_len >= cursor + M + T*A.
+        """
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, m, _ = batch["map_feats"].shape
+        _, t, a, _ = batch["agent_feats"].shape
+        pose, times, segment_ids = self.tokenize(batch)
+        mtok = self.map_enc(params["map_enc"], batch["map_feats"].astype(dt))
+        atok = self.agent_enc(params["agent_enc"],
+                              batch["agent_feats"].astype(dt))
+        x = jnp.concatenate([mtok, atok.reshape(b, t * a, -1)], axis=1)
+        if cfg.encoding == "absolute":
+            x = x + self._pose_embedding(params, pose).astype(dt)
+        logits, cache = self._extend(params, cache, x, pose, times,
+                                     segment_ids)
+        return logits[:, m:].reshape(b, t, a, cfg.num_actions), cache
+
+    def step(self, params, cache, agent_feats, agent_pose, agent_valid,
+             step_time):
+        """Advance every scene slot by one simulation step.
+
+        agent_feats (B, A, Fa); agent_pose (B, A, 3); agent_valid (B, A)
+        bool; step_time (B,) int32 — the simulation step index t of these
+        tokens (their attention time is t + 1, matching ``tokenize``).
+        Returns (action logits (B, A, num_actions), updated cache).
+        """
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, a, _ = agent_feats.shape
+        x = self.agent_enc(params["agent_enc"], agent_feats.astype(dt))
+        if cfg.encoding == "absolute":
+            x = x + self._pose_embedding(params, agent_pose).astype(dt)
+        times = jnp.broadcast_to((step_time + 1)[:, None], (b, a))
+        times = times.astype(jnp.int32)
+        segment_ids = jnp.where(agent_valid, 0, -1).astype(jnp.int32)
+        return self._extend(params, cache, x, agent_pose, times, segment_ids)
 
 
 def action_nll(logits, actions, valid):

@@ -1,7 +1,10 @@
-"""Runtime: step functions, fault-tolerant trainer, serving loop, monitors."""
+"""Runtime: step functions, fault-tolerant trainer, serving/rollout loops,
+monitors."""
 from repro.runtime import steps
+from repro.runtime.rollout import RolloutEngine, rollout_keys
 from repro.runtime.steps import (input_specs, lm_loss, make_prefill_step,
                                  make_serve_step, make_train_step)
 
 __all__ = ["steps", "input_specs", "lm_loss", "make_prefill_step",
-           "make_serve_step", "make_train_step"]
+           "make_serve_step", "make_train_step", "RolloutEngine",
+           "rollout_keys"]

@@ -1,0 +1,159 @@
+"""Batched closed-loop rollout engine over the cached SE(2) decode path.
+
+The agent-simulation analogue of :class:`repro.runtime.server.Server`:
+fixed scene slots, ONE jitted step advancing every slot in lockstep, and
+per-slot cache cursors. Each engine tick appends one simulation step (A
+agent tokens per scene) to every slot's K/V cache and runs the model's
+incremental ``step`` — O(T) attention per tick instead of the O(T^2)
+full-scene recompute the naive rollout pays (see ``docs/rollout.md`` and
+``benchmarks/rollout_bench.py``).
+
+Sampling is device-side and keyed per (scene, sample): slot ``(si, ki)``
+draws from ``fold_in(fold_in(key(seed), si), ki)`` folded again with the
+step index, so rollout metrics are bit-reproducible regardless of slot
+assignment, chunking, or parallel execution order.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import scenarios
+
+
+def step_kinematics(pose, speed, accel, yaw_rate, dt: float = scenarios.DT):
+    """jnp mirror of :func:`repro.data.scenarios.step_kinematics` so the
+    whole engine tick (decode + sample + integrate) stays in one jitted
+    device call. Integration and clamps must match the numpy version
+    exactly (shared constants; parity pinned in tests/test_decode.py)."""
+    speed_new = jnp.clip(speed + accel * dt, 0.0, scenarios.MAX_SPEED)
+    theta_new = pose[..., 2] + yaw_rate * dt
+    mid_speed = 0.5 * (speed + speed_new)
+    x = pose[..., 0] + mid_speed * jnp.cos(theta_new) * dt
+    y = pose[..., 1] + mid_speed * jnp.sin(theta_new) * dt
+    return jnp.stack([x, y, theta_new], axis=-1), speed_new
+
+
+def rollout_keys(seed: int, n_scenes: int, n_samples: int):
+    """The per-(scene, sample) PRNG keys the engine samples with; exposed so
+    baselines can consume the identical stream."""
+    base = jax.random.key(seed)
+    return jnp.stack([
+        jax.random.fold_in(jax.random.fold_in(base, si), ki)
+        for si in range(n_scenes) for ki in range(n_samples)])
+
+
+class RolloutEngine:
+    """Closed-loop simulation over fixed slots with cached incremental decode.
+
+    One slot = one (scene, sample) rollout. ``run`` chunks an arbitrary
+    workload over ``num_slots`` lanes; every chunk reuses the same jitted
+    prefill/step (shapes are static), so there is exactly one compilation
+    of each.
+    """
+
+    def __init__(self, model, params, scen_cfg: scenarios.ScenarioConfig,
+                 *, num_slots: int, max_len: Optional[int] = None,
+                 cache_dtype=None):
+        self.model = model
+        self.params = params
+        self.scen = scen_cfg
+        self.num_slots = num_slots
+        self.max_len = max_len or (scen_cfg.num_map
+                                   + scen_cfg.num_steps * scen_cfg.num_agents)
+        self.cache_dtype = cache_dtype
+        self._accel = jnp.asarray(scen_cfg.accel_values(), jnp.float32)
+        self._yaw = jnp.asarray(scen_cfg.yaw_values(), jnp.float32)
+        self._prefill = jax.jit(model.prefill)
+        self._step = jax.jit(self._step_impl)
+        self.ticks = 0
+
+    def init_cache(self):
+        return self.model.init_cache(self.num_slots, self.max_len,
+                                     self.cache_dtype)
+
+    def _step_impl(self, params, cache, logits, pose, speed, feats_proto,
+                   keys, t):
+        """One engine tick, fully on device: sample an action per agent from
+        the previous step's logits, integrate kinematics to produce sim-step
+        ``t``'s poses, then decode the A new agent tokens against the cache
+        to get the next sampling distribution."""
+        b, a, _ = feats_proto.shape
+        keys_t = jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, t)
+        acts = jax.vmap(jax.random.categorical)(
+            keys_t, logits.astype(jnp.float32))           # (B, A)
+        ai, yi = jnp.divmod(acts, self.scen.yaw_bins)
+        pose, speed = step_kinematics(pose, speed, self._accel[ai],
+                                      self._yaw[yi])
+        feats = feats_proto.at[..., 0].set(speed / 10.0)
+        valid = jnp.ones((b, a), bool)
+        t_vec = jnp.broadcast_to(t, (b,)).astype(jnp.int32)
+        logits, cache = self.model.step(params, cache, feats, pose, valid,
+                                        t_vec)
+        return cache, logits, pose, speed, acts
+
+    def _run_chunk(self, hist_batch: Dict[str, jnp.ndarray], keys,
+                   t_hist: int, t_total: int):
+        """Roll ``num_slots`` independent (scene, sample) lanes forward from
+        their history; returns sampled poses (B, t_total - t_hist, A, 3).
+
+        Mirrors the full-recompute loop's structure exactly: the action for
+        step t is sampled from the logits of the step t-1 agent tokens (the
+        last history step's logits come from prefill), so the cached and
+        recompute rollouts draw from the same distributions with the same
+        per-(scene, sample) key stream.
+        """
+        cache = self.init_cache()
+        hist_logits, cache = self._prefill(self.params, cache, hist_batch)
+        logits = hist_logits[:, -1]                        # (B, A, K)
+        pose = hist_batch["agent_pose"][:, -1]
+        speed = hist_batch["agent_feats"][:, -1, :, 0] * 10.0
+        feats_proto = hist_batch["agent_feats"][:, -1]
+        out = []
+        for t in range(t_hist, t_total):
+            cache, logits, pose, speed, _ = self._step(
+                self.params, cache, logits, pose, speed, feats_proto, keys,
+                jnp.asarray(t, jnp.int32))
+            self.ticks += 1
+            out.append(pose)
+        return jnp.stack(out, axis=1)                      # (B, T_fut, A, 3)
+
+    def run(self, scenes: Sequence[Dict[str, np.ndarray]], *, t_hist: int,
+            n_samples: int, seed: int = 0, t_total: Optional[int] = None):
+        """Closed-loop rollouts for every scene x sample.
+
+        ``scenes``: scene dicts from :func:`scenarios.generate_scene`.
+        Returns sampled future poses, shape
+        (n_scenes, n_samples, t_total - t_hist, A, 3), as numpy.
+        """
+        t_total = t_total or self.scen.num_steps
+        n_scenes = len(scenes)
+        total = n_scenes * n_samples
+        keys_all = rollout_keys(seed, n_scenes, n_samples)
+
+        def lane_hist(flat_idx):
+            s = scenes[flat_idx // n_samples]
+            return {
+                "map_feats": s["map_feats"], "map_pose": s["map_pose"],
+                "map_valid": s["map_valid"],
+                "agent_feats": s["agent_feats"][:t_hist],
+                "agent_pose": s["agent_pose"][:t_hist],
+                "agent_valid": s["agent_valid"][:t_hist],
+            }
+
+        futures = []
+        for start in range(0, total, self.num_slots):
+            lanes = [min(start + i, total - 1)
+                     for i in range(self.num_slots)]  # pad tail by repeating
+            hist = {k: jnp.asarray(np.stack([lane_hist(i)[k] for i in lanes]))
+                    for k in lane_hist(0)}
+            keys = keys_all[jnp.asarray(lanes)]
+            fut = self._run_chunk(hist, keys, t_hist, t_total)
+            futures.append(np.asarray(fut[:total - start]))
+        flat = np.concatenate(futures, axis=0)[:total]
+        t_fut = t_total - t_hist
+        a = self.scen.num_agents
+        return flat.reshape(n_scenes, n_samples, t_fut, a, 3)

@@ -1,0 +1,275 @@
+"""Incremental-decode parity: cached rollout equals the full forward.
+
+Two levels:
+
+  * ops-level — the ``kv_length`` cursor-masked decode path of
+    ``repro.kernels.ops.attention`` reproduces the matching rows of the
+    full-sequence forward across the feature matrix {causal positions,
+    block-causal times, segment ids, GQA} and every impl (ref / chunked /
+    flash-in-interpret-mode).
+  * model-level — ``AgentSimModel.prefill`` + repeated ``step`` over the
+    per-layer transformed-K/V cache reproduces ``__call__``'s logits for
+    all four Table-I encodings, in f32 (tight tol) and bf16 (loose tol).
+    This is the soundness proof of SE(2)-invariant K/V caching: cached
+    ``phi_k``-transformed rows are never re-projected (docs/rollout.md).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import scenarios
+from repro.kernels import ops, ref
+from repro.nn import module as nnm
+from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# ops-level: decode rows == full-forward rows
+# ---------------------------------------------------------------------------
+
+def _qkv(rng, b, hq, hkv, s, d, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    return q, k, v
+
+
+DECODE_CASES = {
+    # positions-as-times exercises plain causal decode in every impl
+    # (flash has no q_offset; explicit times subsume it)
+    "causal": dict(times="iota", segments=False, hkv="mha"),
+    "block_causal_times": dict(times="blocky", segments=False, hkv="mha"),
+    "segments": dict(times="blocky", segments=True, hkv="mha"),
+    "gqa": dict(times="iota", segments=False, hkv="gqa"),
+    "gqa_segments_times": dict(times="blocky", segments=True, hkv="gqa"),
+}
+
+
+@pytest.mark.parametrize("impl", ["ref", "chunked", "flash"])
+@pytest.mark.parametrize("case", sorted(DECODE_CASES))
+def test_ops_decode_matches_full(case, impl):
+    spec = DECODE_CASES[case]
+    rng = np.random.default_rng(sorted(DECODE_CASES).index(case))
+    b, s, d, n = 2, 48, 16, 3
+    hq, hkv = (4, 2) if spec["hkv"] == "gqa" else (2, 2)
+    q, k, v = _qkv(rng, b, hq, hkv, s, d)
+    if spec["times"] == "iota":
+        times = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    else:
+        times = jnp.asarray(np.sort(rng.integers(0, 6, size=(b, s)), -1),
+                            jnp.int32)
+    seg = (jnp.asarray(rng.integers(0, 2, size=(b, s)), jnp.int32)
+           if spec["segments"] else None)
+    kw = dict(causal=True, q_times=times, k_times=times,
+              q_segment_ids=seg, k_segment_ids=seg)
+    extra = dict(interpret=True, block_q=16, block_k=16) \
+        if impl == "flash" else {}
+    if impl == "flash":
+        full = ops.flash_attention(q, k, v, **kw, **extra)
+    else:
+        full = ops.attention(q, k, v, impl=impl, **kw)
+
+    # decode: the last n tokens as queries over the "cache" (all keys),
+    # with per-row cursors — row 0 decodes with a shorter cache to prove
+    # the cursor masks, row 1 with the full one.
+    kvl = jnp.asarray([s - 1, s], jnp.int32)
+    dq = q[:, :, s - n:]
+    dkw = dict(causal=True, q_times=times[:, s - n:], k_times=times,
+               q_segment_ids=None if seg is None else seg[:, s - n:],
+               k_segment_ids=seg, kv_length=kvl)
+    if impl == "flash":
+        got = ops.flash_attention(dq, k, v, **dkw, **extra)
+    else:
+        got = ops.attention(dq, k, v, impl=impl, **dkw)
+
+    # row 1 (full cursor) must equal the full forward's suffix rows
+    np.testing.assert_allclose(np.asarray(got[1]),
+                               np.asarray(full[1, :, s - n:]),
+                               atol=2e-5, rtol=2e-4, err_msg=case)
+    # row 0 (cursor s-1) must equal a forward over the truncated cache
+    want0 = (ops.flash_attention(dq[:1], k[:1, :, :s - 1], v[:1, :, :s - 1],
+                                 causal=True, q_times=times[:1, s - n:],
+                                 k_times=times[:1, :s - 1],
+                                 q_segment_ids=None if seg is None
+                                 else seg[:1, s - n:],
+                                 k_segment_ids=None if seg is None
+                                 else seg[:1, :s - 1], **extra)
+             if impl == "flash" else
+             ops.attention(dq[:1], k[:1, :, :s - 1], v[:1, :, :s - 1],
+                           impl=impl, causal=True,
+                           q_times=times[:1, s - n:],
+                           k_times=times[:1, :s - 1],
+                           q_segment_ids=None if seg is None
+                           else seg[:1, s - n:],
+                           k_segment_ids=None if seg is None
+                           else seg[:1, :s - 1]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want0[0]),
+                               atol=2e-5, rtol=2e-4,
+                               err_msg=f"{case} cursor row")
+
+
+def test_ops_decode_q_offset_equivalence():
+    """kv_length decode == the ref/chunked q_offset decode convention."""
+    rng = np.random.default_rng(42)
+    q, k, v = _qkv(rng, 1, 2, 2, 64, 16)
+    dq = q[:, :, 60:]
+    want = ref.mha_reference(dq, k, v, causal=True, q_offset=60)
+    times = jnp.broadcast_to(jnp.arange(64, dtype=jnp.int32), (1, 64))
+    got = ops.attention(dq, k, v, impl="chunked", causal=True,
+                        q_times=times[:, 60:], k_times=times,
+                        kv_length=jnp.asarray([64], jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# model-level: prefill + step == __call__ for all four encodings
+# ---------------------------------------------------------------------------
+
+SCEN = scenarios.ScenarioConfig(num_map=4, num_agents=2, num_steps=4)
+ENCODINGS = ["absolute", "rope2d", "se2_repr", "se2_fourier"]
+
+
+def _tiny_model(encoding, dtype="float32"):
+    cfg = AgentSimConfig(d_model=32, num_layers=2, num_heads=2, head_dim=12,
+                         d_ff=64, num_actions=SCEN.num_actions,
+                         encoding=encoding, fourier_terms=8,
+                         attn_impl="ref", dtype=dtype)
+    model = AgentSimModel(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(0))
+    return cfg, model, params
+
+
+def _batch(with_invalid=False):
+    b = {k: jnp.asarray(v)
+         for k, v in scenarios.generate_batch(0, 0, 2, SCEN).items()}
+    if with_invalid:
+        valid = np.asarray(b["agent_valid"]).copy()
+        valid[0, 2:, -1] = False          # one agent drops out mid-scene
+        b["agent_valid"] = jnp.asarray(valid)
+    return b
+
+
+@pytest.mark.parametrize("encoding", ENCODINGS)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_cached_decode_matches_full_forward(encoding, dtype):
+    cfg, model, params = _tiny_model(encoding, dtype)
+    batch = _batch()
+    full, _ = model(params, batch)                   # (B, T, A, K)
+    tol = (dict(atol=2e-4, rtol=2e-3) if dtype == "float32"
+           else dict(atol=8e-2, rtol=8e-2))
+
+    t_hist = 2
+    hist = dict(batch)
+    for key in ("agent_feats", "agent_pose", "agent_valid"):
+        hist[key] = batch[key][:, :t_hist]
+    b = batch["map_feats"].shape[0]
+    max_len = SCEN.num_map + SCEN.num_steps * SCEN.num_agents
+    cache = model.init_cache(b, max_len)
+    got, cache = model.prefill(params, cache, hist)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full[:, :t_hist], np.float32),
+                               err_msg=f"{encoding} prefill", **tol)
+    for t in range(t_hist, SCEN.num_steps):
+        lt, cache = model.step(params, cache, batch["agent_feats"][:, t],
+                               batch["agent_pose"][:, t],
+                               batch["agent_valid"][:, t],
+                               jnp.full((b,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lt, np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   err_msg=f"{encoding} step {t}", **tol)
+    assert int(cache["cursor"][0]) == SCEN.num_map + SCEN.num_steps * \
+        SCEN.num_agents
+
+
+@pytest.mark.parametrize("encoding", ["se2_fourier", "absolute"])
+def test_cached_decode_invalid_agents(encoding):
+    """Segment masking composes: dropped-out agents don't poison parity of
+    the tokens that remain valid."""
+    cfg, model, params = _tiny_model(encoding)
+    batch = _batch(with_invalid=True)
+    full, _ = model(params, batch)
+    valid = np.asarray(batch["agent_valid"])
+
+    b = batch["map_feats"].shape[0]
+    max_len = SCEN.num_map + SCEN.num_steps * SCEN.num_agents
+    cache = model.init_cache(b, max_len)
+    hist = dict(batch)
+    for key in ("agent_feats", "agent_pose", "agent_valid"):
+        hist[key] = batch[key][:, :1]
+    got, cache = model.prefill(params, cache, hist)
+    diffs = [np.abs(np.asarray(got[:, 0], np.float32)
+                    - np.asarray(full[:, 0], np.float32))[valid[:, 0]]]
+    for t in range(1, SCEN.num_steps):
+        lt, cache = model.step(params, cache, batch["agent_feats"][:, t],
+                               batch["agent_pose"][:, t],
+                               batch["agent_valid"][:, t],
+                               jnp.full((b,), t, jnp.int32))
+        diffs.append(np.abs(np.asarray(lt, np.float32)
+                            - np.asarray(full[:, t], np.float32))[valid[:, t]])
+    assert max(d.max() for d in diffs if d.size) < 2e-4
+
+
+def test_engine_kinematics_matches_scenario_generator():
+    """The engine's jnp unicycle integrator must track the numpy one in
+    scenarios.py bit-for-bit-ish: if someone retunes the clamp or the
+    integration scheme in one place, this is the test that names it."""
+    from repro.runtime.rollout import step_kinematics as jnp_kin
+
+    rng = np.random.default_rng(99)
+    pose = rng.normal(scale=20.0, size=(32, 3)).astype(np.float32)
+    speed = np.abs(rng.normal(scale=12.0, size=(32,))).astype(np.float32)
+    accel = rng.normal(scale=3.0, size=(32,)).astype(np.float32)
+    yaw = rng.normal(scale=0.5, size=(32,)).astype(np.float32)
+    p_np, s_np = scenarios.step_kinematics(pose, speed, accel, yaw)
+    p_j, s_j = jnp_kin(jnp.asarray(pose), jnp.asarray(speed),
+                       jnp.asarray(accel), jnp.asarray(yaw))
+    np.testing.assert_allclose(np.asarray(p_j), p_np, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_j), s_np, atol=1e-6)
+
+
+def test_per_slot_cursor_decode():
+    """Slots at different cursors decode correctly in ONE batched call —
+    the RolloutEngine / continuous-batching shape: a (B,) cursor vector,
+    per-slot scatter, per-slot step times."""
+    cfg, model, params = _tiny_model("se2_fourier")
+    batch = _batch()
+    full, _ = model(params, batch)
+    b = batch["map_feats"].shape[0]
+    max_len = SCEN.num_map + SCEN.num_steps * SCEN.num_agents
+
+    # slot 0 prefills 1 history step, slot 1 prefills 2: cursors diverge
+    caches = []
+    for t0 in (1, 2):
+        hist = dict(batch)
+        for key in ("agent_feats", "agent_pose", "agent_valid"):
+            hist[key] = batch[key][:, :t0]
+        cache = model.init_cache(b, max_len)
+        _, cache = model.prefill(params, cache, hist)
+        caches.append(cache)
+
+    def pick(leaf_a, leaf_b):
+        axis = 1 if leaf_a.ndim >= 5 else 0      # (L, B, ...) vs (B, ...)
+        take = lambda leaf, i: jax.lax.slice_in_dim(leaf, i, i + 1, axis=axis)
+        return jnp.concatenate([take(leaf_a, 0), take(leaf_b, 1)], axis=axis)
+
+    merged = jax.tree.map(pick, caches[0], caches[1])
+    assert int(merged["cursor"][0]) != int(merged["cursor"][1])
+
+    # one batched step: slot 0 consumes its t=1 tokens, slot 1 its t=2
+    # tokens; each row lands at its own cursor with its own time
+    t_vec = jnp.asarray([1, 2], jnp.int32)
+    gather_t = lambda arr: jnp.stack([arr[0, 1], arr[1, 2]])
+    lt, merged = model.step(params, merged,
+                            gather_t(batch["agent_feats"]),
+                            gather_t(batch["agent_pose"]),
+                            gather_t(batch["agent_valid"]), t_vec)
+    np.testing.assert_allclose(np.asarray(lt[0], np.float32),
+                               np.asarray(full[0, 1], np.float32),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(lt[1], np.float32),
+                               np.asarray(full[1, 2], np.float32),
+                               atol=2e-4, rtol=2e-3)

@@ -271,6 +271,130 @@ def test_chunked_q_offset_decode():
 
 
 # ---------------------------------------------------------------------------
+# Small-q decode path: q_len << block_q (the incremental rollout shape),
+# cursor-based masking via kv_length, and the _pad_all padding edge cases.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq", [1, 2, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_small_q_decode_matches_ref(sq, dtype):
+    """Tiny query counts over a long K/V cache with per-row cursors (GQA).
+
+    Exercises ``_pad_all``'s q_len < block_q path: the auto-shrunk decode
+    block is 16 rows, so every sq here gets zero-padded query rows that
+    must be sliced off without contaminating live rows.
+    """
+    rng = np.random.default_rng(100 + sq)
+    q, k, v = rand_qkv(rng, 2, 4, 2, sq, 96, 16, dtype=dtype)
+    kvl = jnp.asarray([70, 96], jnp.int32)
+    got = ops.flash_attention(q, k, v, kv_length=kvl, block_k=32,
+                              interpret=True)
+    want = ref.mha_reference(q, k, v, kv_length=kvl)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol_for(dtype))
+
+
+def test_flash_small_q_unaligned_kv():
+    """Both _pad_all branches at once: q_len < block_q AND sk % block_k != 0
+    (padded key rows must stay masked behind segment id -1)."""
+    rng = np.random.default_rng(9)
+    q, k, v = rand_qkv(rng, 2, 2, 1, 3, 65, 24, 40)     # MQA + dv != d
+    kvl = jnp.asarray([50, 65], jnp.int32)
+    got = ops.flash_attention(q, k, v, kv_length=kvl, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.mha_reference(q, k, v, kv_length=kvl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_pad_all_q_lt_block_q_direct():
+    """_pad_all with q_len < block_q, driven through the padded forward at
+    an explicit 32-row block (bypasses the auto-shrink)."""
+    rng = np.random.default_rng(10)
+    q, k, v = rand_qkv(rng, 1, 2, 2, 5, 64, 16)
+    out, lse = ops._flash_fwd_padded(q, k, v, None, None, None, None,
+                                     causal=False, window=None, softcap=None,
+                                     scale=None, block_q=32, block_k=32,
+                                     interpret=True)
+    want = ref.mha_reference(q, k, v)
+    assert out.shape == (1, 2, 5, 16) and lse.shape == (1, 2, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(lse),
+                               np.asarray(ref.lse_reference(q, k)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_flash_small_q_times_block_causal_decode():
+    """The agent-sim decode shape: new tokens at one sim step attending a
+    block-causal times cache plus segment ids plus cursor masking."""
+    rng = np.random.default_rng(11)
+    b, sk, n = 2, 64, 4
+    q, k, v = rand_qkv(rng, b, 2, 2, n, sk, 16)
+    k_times = jnp.asarray(np.sort(rng.integers(0, 8, size=(b, sk)), -1),
+                          jnp.int32)
+    q_times = jnp.full((b, n), 5, jnp.int32)
+    seg = jnp.asarray(rng.integers(0, 2, size=(b, sk)), jnp.int32)
+    qseg = jnp.zeros((b, n), jnp.int32)
+    kvl = jnp.asarray([40, 64], jnp.int32)
+    kw = dict(causal=True, q_times=q_times, k_times=k_times,
+              q_segment_ids=qseg, k_segment_ids=seg, kv_length=kvl)
+    got = ops.flash_attention(q, k, v, block_k=16, interpret=True, **kw)
+    want = ref.mha_reference(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_decode_block_q_auto_shrink():
+    assert ops._decode_block_q(1, 128) == 16
+    assert ops._decode_block_q(5, 128) == 16
+    assert ops._decode_block_q(17, 128) == 32
+    assert ops._decode_block_q(128, 128) == 128
+    assert ops._decode_block_q(64, 16) == 16        # never grows the block
+
+
+def test_flash_kv_length_one_sided_segment_ids():
+    """kv_length must survive a caller passing only ONE segment-id side
+    (regression: the fold used to leave q_seg None — which disables the
+    kernel's segment mask entirely — or clobber a provided q_seg)."""
+    rng = np.random.default_rng(13)
+    b, sq, sk = 2, 4, 64
+    q, k, v = rand_qkv(rng, b, 2, 2, sq, sk, 16)
+    kvl = jnp.asarray([40, 64], jnp.int32)
+    kseg = jnp.asarray(rng.integers(0, 2, size=(b, sk)), jnp.int32)
+    got = ops.flash_attention(q, k, v, k_segment_ids=kseg, kv_length=kvl,
+                              block_k=16, interpret=True)
+    want = ref.mha_reference(q, k, v, q_segment_ids=jnp.zeros((b, sq),
+                                                              jnp.int32),
+                             k_segment_ids=kseg, kv_length=kvl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4, err_msg="k-side only")
+    qseg = jnp.asarray(rng.integers(-1, 1, size=(b, sq)), jnp.int32)
+    got = ops.flash_attention(q, k, v, q_segment_ids=qseg, kv_length=kvl,
+                              block_k=16, interpret=True)
+    want = ref.mha_reference(q, k, v, q_segment_ids=qseg,
+                             k_segment_ids=jnp.zeros((b, sk), jnp.int32),
+                             kv_length=kvl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4, err_msg="q-side only")
+
+
+@pytest.mark.parametrize("impl", ["ref", "chunked"])
+def test_kv_length_scalar_and_vector(impl):
+    """Scalar cursors behave like broadcast vectors in the XLA impls."""
+    rng = np.random.default_rng(12)
+    q, k, v = rand_qkv(rng, 2, 2, 2, 4, 48, 16)
+    a = ops.attention(q, k, v, impl=impl, kv_length=33, chunk_size=16)
+    b_ = ops.attention(q, k, v, impl=impl,
+                       kv_length=jnp.asarray([33, 33], jnp.int32),
+                       chunk_size=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+    want = ref.mha_reference(q, k[:, :, :33], v[:, :, :33])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
 # SE(2) Fourier projection kernel vs the encodings oracle.
 # ---------------------------------------------------------------------------
 

@@ -1,10 +1,12 @@
-"""Unit + property tests for SE(2) group operations."""
+"""Unit + property tests for SE(2) group operations, plus the end-to-end
+model property the group structure buys: globally re-posing a scene leaves
+SE(2)-relative rollout action distributions unchanged."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")   # optional dev dep; see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
+from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import se2
 
@@ -92,3 +94,75 @@ def test_associativity(x1, y1, t1, x2, y2, t2, x3, y3, t3):
                                atol=1e-4)
     dth = float(se2.wrap_angle(lhs[2] - rhs[2]))
     assert abs(dth) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Global SE(2) invariance of rollout action distributions.
+#
+# Applying one rigid transform z to EVERY pose in a scene leaves all
+# relative poses p_n^{-1} p_m unchanged, so an SE(2)-relative model's
+# action logits — and hence what a closed-loop rollout samples — must not
+# move (up to the Fourier truncation / f32 error). The "absolute" baseline
+# reads raw poses through a learned embedding and must move measurably.
+# ---------------------------------------------------------------------------
+
+def _sim_setup(encoding):
+    from repro.data import scenarios
+    from repro.nn import module as nnm
+    from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
+
+    scen = scenarios.ScenarioConfig(num_map=4, num_agents=2, num_steps=3)
+    cfg = AgentSimConfig(d_model=32, num_layers=2, num_heads=2, head_dim=12,
+                         d_ff=64, num_actions=scen.num_actions,
+                         encoding=encoding, fourier_terms=18,
+                         attn_impl="ref")
+    model = AgentSimModel(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(1))
+    batch = {k: jnp.asarray(v)
+             for k, v in scenarios.generate_batch(3, 0, 1, scen).items()}
+    return model, params, batch
+
+
+_SIM_CACHE = {}
+
+
+def _action_dists(encoding, z):
+    """Softmax action distributions of the last sim step — what a rollout
+    samples from — after re-posing the whole scene by z."""
+    if encoding not in _SIM_CACHE:
+        _SIM_CACHE[encoding] = _sim_setup(encoding)
+    model, params, batch = _SIM_CACHE[encoding]
+    b = dict(batch)
+    b["map_pose"] = se2.compose(z, batch["map_pose"])
+    b["agent_pose"] = se2.compose(z, batch["agent_pose"])
+    logits, _ = model(params, b)
+    return np.asarray(jax.nn.softmax(logits[:, -1].astype(jnp.float32), -1))
+
+
+transl = st.floats(min_value=-4.0, max_value=4.0, allow_nan=False, width=32)
+angle = st.floats(min_value=-np.pi, max_value=np.pi, allow_nan=False,
+                  width=32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(zx=transl, zy=transl, zth=angle)
+def test_rollout_action_dists_invariant_relative_encodings(zx, zy, zth):
+    z = jnp.asarray([zx, zy, zth], jnp.float32)
+    e = jnp.zeros(3, jnp.float32)
+    # se2_repr is exact (f32 roundoff only); se2_fourier carries the
+    # truncation error of the F=18 basis on top.
+    for encoding, tol in (("se2_repr", 5e-4), ("se2_fourier", 5e-3)):
+        base = _action_dists(encoding, e)
+        moved = _action_dists(encoding, z)
+        np.testing.assert_allclose(moved, base, atol=tol,
+                                   err_msg=encoding)
+
+
+@settings(max_examples=8, deadline=None)
+@given(zx=transl, zy=transl, zth=angle)
+def test_rollout_action_dists_absolute_not_invariant(zx, zy, zth):
+    assume(abs(zx) + abs(zy) > 1.0 or abs(zth) > 0.5)
+    z = jnp.asarray([zx, zy, zth], jnp.float32)
+    base = _action_dists("absolute", jnp.zeros(3, jnp.float32))
+    moved = _action_dists("absolute", z)
+    assert np.max(np.abs(moved - base)) > 1e-4
