@@ -98,7 +98,8 @@ def rollout_minade(cfg, model, params, n_scenes=8, n_samples=16, seed=123,
     for si, scene in enumerate(scenes):
         m = scenarios.rollout_metrics(
             SCEN, scene["agent_pose"][t_hist:], futures[si],
-            scene["behavior"])
+            scene["behavior"],
+            agent_valid=scene["agent_valid"][t_hist:])
         for k, v in m.items():
             if np.isfinite(v):
                 per_cat[k].append(v)

@@ -5,6 +5,8 @@ Prints ``name,value,notes`` CSV rows. Modules:
   approx_error       — paper Fig. 3/4 (Fourier truncation error)
   attention_scaling  — the linear-vs-quadratic memory claim (Sec. II-B)
   agent_sim_table1   — Table I proxy on synthetic scenes (NLL by encoding)
+  scenario_eval      — closed-loop per-family eval on the lane-graph
+                       scenario suite (minADE/miss/collision/off-road)
   adaptive_basis     — beyond-paper: scale-adaptive basis truncation
   kernel_bench       — kernel micro-times + Pallas/oracle parity
   roofline_summary   — aggregates experiments/dryrun/*.json if present
@@ -59,10 +61,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
     ap.add_argument("--table1-steps", type=int, default=150)
+    ap.add_argument("--scenario-train-steps", type=int, default=100)
     args = ap.parse_args()
 
     from benchmarks import (adaptive_basis, agent_sim_table1, approx_error,
-                            attention_scaling, kernel_bench)
+                            attention_scaling, kernel_bench, scenario_eval)
 
     benches = {
         "approx_error": lambda: approx_error.run(_report),
@@ -71,6 +74,8 @@ def main() -> None:
         "kernel_bench": lambda: kernel_bench.run(_report),
         "agent_sim_table1": lambda: agent_sim_table1.run(
             _report, steps=args.table1_steps),
+        "scenario_eval": lambda: scenario_eval.run(
+            _report, train_steps=args.scenario_train_steps),
         "roofline_summary": lambda: roofline_summary(_report),
     }
     only = set(args.only.split(",")) if args.only else set(benches)

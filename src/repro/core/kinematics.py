@@ -1,0 +1,52 @@
+"""Unicycle kinematics shared by every layer that integrates agent motion.
+
+One implementation, array-API-agnostic: the host-side scenario generators
+call it on numpy arrays, the jitted :class:`repro.runtime.RolloutEngine`
+tick calls it on jax arrays (tracers included), and both integrate
+*identically* — same midpoint scheme, same speed clamp, same constants.
+This replaces the numpy/jnp twin functions that previously lived in
+``repro.data.scenarios`` and ``repro.runtime.rollout`` and were held in
+sync only by a NOTE comment (the parity test in ``tests/test_decode.py``
+now pins a tautology, which is the point).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DT = 0.5          # seconds per simulation step
+MAX_SPEED = 25.0  # m/s clamp in the unicycle integrator
+
+
+def _namespace(x):
+    """numpy for host arrays/scalars, jax.numpy for jax arrays & tracers."""
+    if type(x).__module__.split(".")[0] in ("jax", "jaxlib"):
+        import jax.numpy as jnp
+        return jnp
+    return np
+
+
+def wrap_angle(theta, xp=None):
+    """Wrap angles to (-pi, pi], numpy or jax alike (the one shared
+    implementation — `repro.core.se2.wrap_angle` stays jax-only for jit)."""
+    if xp is None:
+        xp = _namespace(theta)
+    return xp.arctan2(xp.sin(theta), xp.cos(theta))
+
+
+def step_kinematics(pose, speed, accel, yaw_rate, dt: float = DT, xp=None):
+    """Midpoint-speed unicycle step.
+
+    pose (..., 3) = (x, y, theta); speed/accel/yaw_rate broadcastable to
+    pose[..., 0]. Returns (new_pose, new_speed). ``xp`` overrides the
+    array namespace (numpy / jax.numpy); by default it is inferred from
+    ``pose`` so the same function serves the host data pipeline and the
+    jitted engine tick.
+    """
+    if xp is None:
+        xp = _namespace(pose)
+    speed_new = xp.clip(speed + accel * dt, 0.0, MAX_SPEED)
+    theta_new = pose[..., 2] + yaw_rate * dt
+    mid_speed = 0.5 * (speed + speed_new)
+    x = pose[..., 0] + mid_speed * xp.cos(theta_new) * dt
+    y = pose[..., 1] + mid_speed * xp.sin(theta_new) * dt
+    return xp.stack([x, y, theta_new], axis=-1), speed_new

@@ -1,170 +1,52 @@
-"""Synthetic driving-scenario generator for the agent-simulation task.
+"""Back-compat shim over the scenario subsystem (``repro.scenarios``).
 
-The paper trains on a 33M-scenario private dataset; we substitute a
-procedural generator with the same interface statistics: lane polylines
-(map tokens with SE(2) poses), agents spawned on lanes that follow them
-with kinematic-unicycle dynamics + noise, and ground-truth next-action
-labels on a discrete (acceleration x yaw-rate) grid.
+The synthetic driving-scenario generator that used to live here is now
+the ``freeform`` family of ``repro.scenarios.families`` — one of several
+procedural families on the lane-graph world model. This module keeps the
+historical surface (``ScenarioConfig``, ``generate_scene``,
+``generate_batch``, the action codec, ``step_kinematics``,
+``rollout_metrics``) so the data pipeline, benchmarks, and tests keep
+working unchanged; ``generate_scene`` returns bit-identical arrays to
+every pre-refactor release (the freeform family preserves its original
+RNG stream).
 
-Everything is numpy (host-side data pipeline); scenes are generated
-deterministically from (seed, index) so the pipeline is checkpointable by
-cursor alone and shards trivially across data-loader hosts.
+New code should import from ``repro.scenarios`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import numpy as np
 
-DT = 0.5          # seconds per simulation step
-MAX_SPEED = 25.0  # m/s clamp in the unicycle integrator
-# NOTE: repro.runtime.rollout.step_kinematics is the jnp mirror of
-# step_kinematics below (the engine needs it jit-able on device); both
-# must integrate identically — tests/test_decode.py pins the parity.
+from repro.core.kinematics import DT, MAX_SPEED
+from repro.core.kinematics import step_kinematics as _step_kinematics
+from repro.scenarios.core import (ScenarioConfig, decode_action,
+                                  encode_action, rollout_metrics)
+from repro.scenarios.families import freeform as _freeform
 
-
-@dataclasses.dataclass(frozen=True)
-class ScenarioConfig:
-    num_map: int = 32             # lane-segment tokens per scene
-    num_agents: int = 8
-    num_steps: int = 16           # history+future steps tokenized
-    accel_bins: int = 7           # action grid
-    yaw_bins: int = 9
-    max_accel: float = 3.0        # m/s^2
-    max_yaw_rate: float = 0.5     # rad/s
-    map_radius: float = 60.0
-    agent_feat_dim: int = 8
-    map_feat_dim: int = 8
-
-    @property
-    def num_actions(self) -> int:
-        return self.accel_bins * self.yaw_bins
-
-    def accel_values(self):
-        return np.linspace(-self.max_accel, self.max_accel, self.accel_bins)
-
-    def yaw_values(self):
-        return np.linspace(-self.max_yaw_rate, self.max_yaw_rate,
-                           self.yaw_bins)
-
-
-def encode_action(cfg: ScenarioConfig, accel, yaw_rate):
-    """Nearest grid cell -> action id."""
-    ai = np.argmin(np.abs(cfg.accel_values()[None, :]
-                          - np.asarray(accel)[..., None]), axis=-1)
-    yi = np.argmin(np.abs(cfg.yaw_values()[None, :]
-                          - np.asarray(yaw_rate)[..., None]), axis=-1)
-    return ai * cfg.yaw_bins + yi
-
-
-def decode_action(cfg: ScenarioConfig, action_id):
-    ai, yi = np.divmod(np.asarray(action_id), cfg.yaw_bins)
-    return cfg.accel_values()[ai], cfg.yaw_values()[yi]
+__all__ = ["DT", "MAX_SPEED", "ScenarioConfig", "encode_action",
+           "decode_action", "step_kinematics", "generate_scene",
+           "generate_batch", "rollout_metrics"]
 
 
 def step_kinematics(pose, speed, accel, yaw_rate, dt: float = DT):
-    """Unicycle integration; pose (..., 3), returns (new_pose, new_speed)."""
-    speed_new = np.clip(speed + accel * dt, 0.0, MAX_SPEED)
-    theta_new = pose[..., 2] + yaw_rate * dt
-    mid_speed = 0.5 * (speed + speed_new)
-    x = pose[..., 0] + mid_speed * np.cos(theta_new) * dt
-    y = pose[..., 1] + mid_speed * np.sin(theta_new) * dt
-    return np.stack([x, y, theta_new], axis=-1), speed_new
+    """Unicycle integration; pose (..., 3), returns (new_pose, new_speed).
 
-
-def _make_lanes(rng, cfg: ScenarioConfig):
-    """A few arcs/straights through the scene; returns per-segment pose+feat."""
-    poses = np.zeros((cfg.num_map, 3), np.float32)
-    feats = np.zeros((cfg.num_map, cfg.map_feat_dim), np.float32)
-    n_lanes = rng.integers(2, 5)
-    seg_per_lane = cfg.num_map // n_lanes
-    idx = 0
-    lanes = []
-    for li in range(n_lanes):
-        start = rng.uniform(-cfg.map_radius * 0.5, cfg.map_radius * 0.5, 2)
-        heading = rng.uniform(-np.pi, np.pi)
-        curvature = rng.uniform(-0.02, 0.02)
-        seg_len = rng.uniform(5.0, 10.0)
-        pts = []
-        x, y, th = start[0], start[1], heading
-        for si in range(seg_per_lane):
-            if idx >= cfg.num_map:
-                break
-            poses[idx] = (x, y, th)
-            feats[idx, 0] = seg_len / 10.0
-            feats[idx, 1] = curvature * 50.0
-            feats[idx, 2] = 1.0  # type: lane
-            feats[idx, 3] = li / n_lanes
-            pts.append((x, y, th, seg_len))
-            x += seg_len * np.cos(th)
-            y += seg_len * np.sin(th)
-            th += curvature * seg_len
-            idx += 1
-        lanes.append(pts)
-    return poses, feats, lanes
+    Host-side numpy entry point of the shared integrator in
+    ``repro.core.kinematics`` (the rollout engine jits the same function
+    on jax arrays — one implementation, no twins to keep in sync)."""
+    return _step_kinematics(pose, speed, accel, yaw_rate, dt, xp=np)
 
 
 def generate_scene(seed: int, index: int, cfg: ScenarioConfig
                    ) -> Dict[str, np.ndarray]:
-    """One scene: map tokens, agent rollouts, and next-action labels.
+    """One free-form scene: map tokens, agent rollouts, next-action labels.
 
-    Returns arrays shaped for ``AgentSimModel``:
-      map_feats (M, Fm), map_pose (M, 3), map_valid (M,)
-      agent_feats (T, A, Fa), agent_pose (T, A, 3), agent_valid (T, A)
-      actions (T, A) int32   — action taken between t and t+1
-    """
-    rng = np.random.default_rng(np.random.SeedSequence([seed, index]))
-    map_pose, map_feats, lanes = _make_lanes(rng, cfg)
-
-    a, t = cfg.num_agents, cfg.num_steps
-    pose = np.zeros((a, 3), np.float32)
-    speed = rng.uniform(0.0, 12.0, a).astype(np.float32)
-    behavior = rng.integers(0, 3, a)  # 0 stationary-ish, 1 straight, 2 turny
-    for ai in range(a):
-        lane = lanes[rng.integers(0, len(lanes))]
-        seg = lane[rng.integers(0, len(lane))]
-        pose[ai] = (seg[0] + rng.normal(0, 1.0), seg[1] + rng.normal(0, 1.0),
-                    seg[2] + rng.normal(0, 0.1))
-        if behavior[ai] == 0:
-            speed[ai] = rng.uniform(0, 0.5)
-
-    agent_pose = np.zeros((t, a, 3), np.float32)
-    agent_feats = np.zeros((t, a, cfg.agent_feat_dim), np.float32)
-    actions = np.zeros((t, a), np.int64)
-    cur_pose, cur_speed = pose, speed
-    for ti in range(t):
-        agent_pose[ti] = cur_pose
-        agent_feats[ti, :, 0] = cur_speed / 10.0
-        agent_feats[ti, :, 1] = (behavior == 1)
-        agent_feats[ti, :, 2] = (behavior == 2)
-        agent_feats[ti, :, 3] = 1.0
-        # policy: noisy accel; turny agents sweep yaw rate sinusoidally
-        accel = np.where(behavior == 0,
-                         -cur_speed / DT * 0.5,
-                         rng.normal(0.3, 0.8, a))
-        yaw = np.where(behavior == 2,
-                       cfg.max_yaw_rate * 0.7
-                       * np.sin(0.4 * ti + np.arange(a)),
-                       rng.normal(0, 0.03, a))
-        accel = np.clip(accel, -cfg.max_accel, cfg.max_accel)
-        yaw = np.clip(yaw, -cfg.max_yaw_rate, cfg.max_yaw_rate)
-        act_id = encode_action(cfg, accel, yaw)
-        actions[ti] = act_id
-        # integrate with the *quantized* action so labels are exact
-        qa, qy = decode_action(cfg, act_id)
-        cur_pose, cur_speed = step_kinematics(cur_pose, cur_speed, qa, qy)
-
-    return {
-        "map_feats": map_feats,
-        "map_pose": map_pose,
-        "map_valid": np.ones(cfg.num_map, bool),
-        "agent_feats": agent_feats,
-        "agent_pose": agent_pose,
-        "agent_valid": np.ones((t, a), bool),
-        "actions": actions.astype(np.int32),
-        "behavior": behavior.astype(np.int32),
-    }
+    Returns arrays shaped for ``AgentSimModel`` (see
+    ``repro.scenarios.core.Scene``); identical to the historical output
+    plus an ``agent_type`` vector (all vehicles)."""
+    tensors, _ = _freeform.generate_tensors(seed, index, cfg)
+    return tensors
 
 
 def generate_batch(seed: int, start_index: int, batch_size: int,
@@ -172,20 +54,3 @@ def generate_batch(seed: int, start_index: int, batch_size: int,
     scenes = [generate_scene(seed, start_index + i, cfg)
               for i in range(batch_size)]
     return {k: np.stack([s[k] for s in scenes]) for k in scenes[0]}
-
-
-def rollout_metrics(cfg: ScenarioConfig, gt_pose, sampled_poses, behavior):
-    """minADE over samples, split by ground-truth behavior category.
-
-    gt_pose (T, A, 3); sampled_poses (K, T, A, 3); behavior (A,).
-    Returns dict of minADE per category (paper Table I columns).
-    """
-    d = np.linalg.norm(sampled_poses[..., :2] - gt_pose[None, ..., :2],
-                       axis=-1)                     # (K, T, A)
-    ade = d.mean(axis=1)                            # (K, A)
-    min_ade = ade.min(axis=0)                       # (A,)
-    out = {}
-    for name, b in (("stationary", 0), ("straight", 1), ("turning", 2)):
-        sel = behavior == b
-        out[name] = float(min_ade[sel].mean()) if sel.any() else float("nan")
-    return out

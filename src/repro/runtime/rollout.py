@@ -21,20 +21,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data import scenarios
+from repro.core import kinematics
+from repro.scenarios.core import ScenarioConfig
 
 
-def step_kinematics(pose, speed, accel, yaw_rate, dt: float = scenarios.DT):
-    """jnp mirror of :func:`repro.data.scenarios.step_kinematics` so the
-    whole engine tick (decode + sample + integrate) stays in one jitted
-    device call. Integration and clamps must match the numpy version
-    exactly (shared constants; parity pinned in tests/test_decode.py)."""
-    speed_new = jnp.clip(speed + accel * dt, 0.0, scenarios.MAX_SPEED)
-    theta_new = pose[..., 2] + yaw_rate * dt
-    mid_speed = 0.5 * (speed + speed_new)
-    x = pose[..., 0] + mid_speed * jnp.cos(theta_new) * dt
-    y = pose[..., 1] + mid_speed * jnp.sin(theta_new) * dt
-    return jnp.stack([x, y, theta_new], axis=-1), speed_new
+def step_kinematics(pose, speed, accel, yaw_rate,
+                    dt: float = kinematics.DT):
+    """jnp entry point of the shared unicycle integrator
+    (:mod:`repro.core.kinematics`) so the whole engine tick (decode +
+    sample + integrate) stays in one jitted device call. The host data
+    pipeline calls the very same function on numpy arrays — one
+    implementation, identical integration by construction."""
+    return kinematics.step_kinematics(pose, speed, accel, yaw_rate, dt,
+                                      xp=jnp)
 
 
 def rollout_keys(seed: int, n_scenes: int, n_samples: int):
@@ -55,7 +54,7 @@ class RolloutEngine:
     of each.
     """
 
-    def __init__(self, model, params, scen_cfg: scenarios.ScenarioConfig,
+    def __init__(self, model, params, scen_cfg: ScenarioConfig,
                  *, num_slots: int, max_len: Optional[int] = None,
                  cache_dtype=None):
         self.model = model
@@ -76,20 +75,26 @@ class RolloutEngine:
                                      self.cache_dtype)
 
     def _step_impl(self, params, cache, logits, pose, speed, feats_proto,
-                   keys, t):
+                   valid, keys, t):
         """One engine tick, fully on device: sample an action per agent from
         the previous step's logits, integrate kinematics to produce sim-step
         ``t``'s poses, then decode the A new agent tokens against the cache
-        to get the next sampling distribution."""
+        to get the next sampling distribution.
+
+        ``valid`` (B, A) marks each slot's real agents (families generate
+        variable agent counts padded to A slots); invalid agents are frozen
+        in place and their tokens enter the cache segment-masked, so they
+        never influence attention or metrics."""
         b, a, _ = feats_proto.shape
         keys_t = jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, t)
         acts = jax.vmap(jax.random.categorical)(
             keys_t, logits.astype(jnp.float32))           # (B, A)
         ai, yi = jnp.divmod(acts, self.scen.yaw_bins)
-        pose, speed = step_kinematics(pose, speed, self._accel[ai],
-                                      self._yaw[yi])
+        new_pose, new_speed = step_kinematics(pose, speed, self._accel[ai],
+                                              self._yaw[yi])
+        pose = jnp.where(valid[..., None], new_pose, pose)
+        speed = jnp.where(valid, new_speed, speed)
         feats = feats_proto.at[..., 0].set(speed / 10.0)
-        valid = jnp.ones((b, a), bool)
         t_vec = jnp.broadcast_to(t, (b,)).astype(jnp.int32)
         logits, cache = self.model.step(params, cache, feats, pose, valid,
                                         t_vec)
@@ -112,11 +117,14 @@ class RolloutEngine:
         pose = hist_batch["agent_pose"][:, -1]
         speed = hist_batch["agent_feats"][:, -1, :, 0] * 10.0
         feats_proto = hist_batch["agent_feats"][:, -1]
+        # agents valid at the last history step stay the slot's live set
+        # for the whole future (families keep validity constant in time)
+        valid = hist_batch["agent_valid"][:, -1]
         out = []
         for t in range(t_hist, t_total):
             cache, logits, pose, speed, _ = self._step(
-                self.params, cache, logits, pose, speed, feats_proto, keys,
-                jnp.asarray(t, jnp.int32))
+                self.params, cache, logits, pose, speed, feats_proto,
+                valid, keys, jnp.asarray(t, jnp.int32))
             self.ticks += 1
             out.append(pose)
         return jnp.stack(out, axis=1)                      # (B, T_fut, A, 3)
@@ -125,10 +133,11 @@ class RolloutEngine:
             n_samples: int, seed: int = 0, t_total: Optional[int] = None):
         """Closed-loop rollouts for every scene x sample.
 
-        ``scenes``: scene dicts from :func:`scenarios.generate_scene`.
-        Returns sampled future poses, shape
-        (n_scenes, n_samples, t_total - t_hist, A, 3), as numpy.
+        ``scenes``: scene tensor dicts (any registered family's layout) or
+        ``repro.scenarios.Scene`` objects. Returns sampled future poses,
+        shape (n_scenes, n_samples, t_total - t_hist, A, 3), as numpy.
         """
+        scenes = [s.tensors if hasattr(s, "tensors") else s for s in scenes]
         t_total = t_total or self.scen.num_steps
         n_scenes = len(scenes)
         total = n_scenes * n_samples

@@ -1,0 +1,36 @@
+"""Scenario suite: lane-graph world model + procedural scenario families.
+
+The evaluation surface of the repo: a :class:`LaneGraph` world
+(`lane_graph.py`), rule-based reference policies (`policies.py`), and a
+registry of procedural families (`families/`) that each emit the same
+``AgentSimModel`` tensor dict — variable agent counts via validity masks,
+deterministic from ``(family, seed, index)``. The closed-loop evaluation
+harness over these scenes lives in ``repro.runtime.evaluation``.
+
+>>> from repro import scenarios
+>>> scenarios.registry.names()
+['freeform', 'highway', 'onramp_merge', 'pedestrian_crossing',
+ 'roundabout', 'signalized_intersection', 'unprotected_left']
+>>> scene = scenarios.generate_scene("roundabout", seed=0, index=3,
+...                                  cfg=scenarios.ScenarioConfig())
+"""
+from repro.scenarios import core, lane_graph, policies, registry
+from repro.scenarios import families  # noqa: F401  (registers families)
+from repro.scenarios.core import (AGENT_TYPE, DT, MAX_SPEED, Scene,
+                                  ScenarioConfig, assemble_scene,
+                                  classify_behavior, decode_action,
+                                  encode_action, rollout_metrics,
+                                  stack_scenes, step_kinematics,
+                                  transform_poses, transform_scene)
+from repro.scenarios.lane_graph import LaneGraph
+from repro.scenarios.registry import (generate_mixed, generate_mixed_batch,
+                                      generate_scene)
+
+__all__ = [
+    "core", "lane_graph", "policies", "registry", "families",
+    "AGENT_TYPE", "DT", "MAX_SPEED", "Scene", "ScenarioConfig",
+    "assemble_scene", "classify_behavior", "decode_action", "encode_action",
+    "rollout_metrics", "stack_scenes", "step_kinematics", "transform_poses",
+    "transform_scene", "LaneGraph", "generate_mixed", "generate_mixed_batch",
+    "generate_scene",
+]

@@ -1,0 +1,9 @@
+"""Procedural scenario families. Importing this package registers every
+family with ``repro.scenarios.registry`` (import side effect by design —
+the registry is the discovery surface, see ``registry.names()``)."""
+from repro.scenarios.families import (freeform, highway, intersection,
+                                      left_turn, merge, pedestrian,
+                                      roundabout)
+
+__all__ = ["freeform", "highway", "intersection", "left_turn", "merge",
+           "pedestrian", "roundabout"]

@@ -1,0 +1,82 @@
+"""Scenario family registry.
+
+A *family* is a named procedural generator: ``(seed, index, cfg) ->
+Scene``, pairing a lane-graph map generator with rule-based reference
+policies. Families self-register at import via :func:`register`;
+``repro.scenarios`` imports the ``families`` package so simply importing
+the subsystem populates the registry.
+
+Determinism contract: a family derives ALL randomness from
+``family_rng(name, seed, index)`` — one ``np.random.Generator`` seeded by
+a stable per-family salt plus (seed, index) — so any scene is
+reproducible from its cursor alone and the index space shards trivially
+across data-loader hosts (same contract as ``repro.data.pipeline``).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.scenarios.core import Scene, ScenarioConfig, stack_scenes
+
+FamilyFn = Callable[[int, int, ScenarioConfig], Scene]
+
+_FAMILIES: Dict[str, FamilyFn] = {}
+
+
+def register(name: str) -> Callable[[FamilyFn], FamilyFn]:
+    """Decorator: ``@register("highway")`` over a generate function."""
+    def deco(fn: FamilyFn) -> FamilyFn:
+        if name in _FAMILIES:
+            raise ValueError(f"scenario family {name!r} already registered")
+        _FAMILIES[name] = fn
+        return fn
+    return deco
+
+
+def names() -> List[str]:
+    """All registered family names, sorted (discoverability surface)."""
+    return sorted(_FAMILIES)
+
+
+def get(name: str) -> FamilyFn:
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario family {name!r}; "
+                       f"registered: {names()}") from None
+
+
+def family_rng(name: str, seed: int, index: int) -> np.random.Generator:
+    """The one rng a family may draw from: salted by the family name so
+    e.g. highway scene (7, 3) and merge scene (7, 3) are independent."""
+    salt = zlib.crc32(name.encode())
+    return np.random.default_rng(np.random.SeedSequence([salt, seed, index]))
+
+
+def generate_scene(name: str, seed: int, index: int,
+                   cfg: ScenarioConfig) -> Scene:
+    return get(name)(seed, index, cfg)
+
+
+def generate_mixed(seed: int, start_index: int, count: int,
+                   cfg: ScenarioConfig,
+                   families: Optional[Sequence[str]] = None) -> List[Scene]:
+    """``count`` scenes cycling deterministically over ``families``
+    (default: every registered family) — the mixed-family stream the
+    closed-loop evaluation harness and training batches consume."""
+    fams = list(families) if families is not None else names()
+    return [generate_scene(fams[(start_index + i) % len(fams)], seed,
+                           start_index + i, cfg)
+            for i in range(count)]
+
+
+def generate_mixed_batch(seed: int, start_index: int, batch_size: int,
+                         cfg: ScenarioConfig,
+                         families: Optional[Sequence[str]] = None):
+    """Mixed-family training batch with the ``ShardedIterator`` signature
+    ``(seed, start_index, batch_size) -> dict of stacked arrays``."""
+    return stack_scenes(generate_mixed(seed, start_index, batch_size, cfg,
+                                       families))
