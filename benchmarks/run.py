@@ -7,6 +7,8 @@ Prints ``name,value,notes`` CSV rows. Modules:
   agent_sim_table1   — Table I proxy on synthetic scenes (NLL by encoding)
   scenario_eval      — closed-loop per-family eval on the lane-graph
                        scenario suite (minADE/miss/collision/off-road)
+  train_bench        — BC trainer throughput (steps/s, datagen cost, loss
+                       trajectory) -> BENCH_train.json
   adaptive_basis     — beyond-paper: scale-adaptive basis truncation
   kernel_bench       — kernel micro-times + Pallas/oracle parity
   roofline_summary   — aggregates experiments/dryrun/*.json if present
@@ -62,10 +64,12 @@ def main() -> None:
                     help="comma-separated subset of benchmarks")
     ap.add_argument("--table1-steps", type=int, default=150)
     ap.add_argument("--scenario-train-steps", type=int, default=100)
+    ap.add_argument("--train-bench-steps", type=int, default=80)
     args = ap.parse_args()
 
     from benchmarks import (adaptive_basis, agent_sim_table1, approx_error,
-                            attention_scaling, kernel_bench, scenario_eval)
+                            attention_scaling, kernel_bench, scenario_eval,
+                            train_bench)
 
     benches = {
         "approx_error": lambda: approx_error.run(_report),
@@ -76,6 +80,8 @@ def main() -> None:
             _report, steps=args.table1_steps),
         "scenario_eval": lambda: scenario_eval.run(
             _report, train_steps=args.scenario_train_steps),
+        "train_bench": lambda: train_bench.run(
+            _report, steps=args.train_bench_steps),
         "roofline_summary": lambda: roofline_summary(_report),
     }
     only = set(args.only.split(",")) if args.only else set(benches)

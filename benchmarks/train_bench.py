@@ -1,0 +1,129 @@
+"""Training-throughput benchmark for the agent-sim BC trainer.
+
+Measures steps/s of the jitted sharded train step (device work) and the
+host-side expert-demonstration generation cost separately — the two
+numbers that size a data-loader fleet — plus the loss trajectory, and
+writes the machine-readable record to ``BENCH_train.json`` so successive
+PRs accumulate a bench trajectory.
+
+``--smoke`` is the CI variant: few steps, asserts the step is finite,
+training moves the loss down from init, and throughput is nonzero.
+
+Run:  PYTHONPATH=src python benchmarks/train_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_sim_arch
+from repro.nn import module as nnm
+from repro.nn.agent_sim import AgentSimModel
+from repro.optim import adamw, chain, clip_by_global_norm
+from repro.training.data import make_batch_fn
+from repro.training.steps import loss_summary, make_sim_train_step
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "..", "BENCH_train.json")
+
+
+def run(report, *, arch="sim-se2-fourier", steps=80, warmup=5, batch=8,
+        lr=3e-3, seed=0, n_unique_batches=32, smoke=False, out=None):
+    """Time the train step over a cycled pool of pre-generated batches.
+
+    Pre-generating decouples device steps/s from host scene generation
+    (measured separately as ``datagen_s_per_batch``); cycling a pool keeps
+    the loss trajectory meaningful without paying generation per step.
+    """
+    if steps < 1:
+        raise ValueError("train_bench needs steps >= 1")
+    warmup = min(warmup, steps - 1)   # guarantee the timed window exists
+    sim = get_sim_arch(arch).reduced()
+    cfg = sim.agent_sim_config()
+    scen = sim.scenario_config()
+    model = AgentSimModel(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(seed))
+    opt = chain(clip_by_global_norm(1.0), adamw(lr))
+    opt_state = opt.init(params)
+    step = jax.jit(make_sim_train_step(model, opt))
+    mk = make_batch_fn(scen)
+
+    n_unique = min(steps, n_unique_batches)
+    t0 = time.time()
+    pool = [{k: jnp.asarray(v) for k, v in mk(seed, i * batch, batch).items()}
+            for i in range(n_unique)]
+    datagen_s = (time.time() - t0) / n_unique
+
+    losses = []
+    t_start = None
+    for i in range(steps):
+        if i == warmup:
+            jax.block_until_ready(params)
+            t_start = time.time()
+        params, opt_state, m = step(params, opt_state, pool[i % n_unique])
+        losses.append(float(m["loss"]))
+    jax.block_until_ready(params)
+    elapsed = time.time() - t_start
+    timed_steps = steps - warmup      # >= 1 by the warmup clamp above
+    steps_per_s = timed_steps / max(elapsed, 1e-9)
+
+    rec = {
+        "arch": sim.name, "encoding": sim.encoding,
+        "steps": steps, "batch": batch,
+        "n_params": nnm.count_params(model.specs()),
+        "tokens_per_scene": scen.num_map + scen.num_steps * scen.num_agents,
+        "steps_per_s": steps_per_s,
+        "sec_per_step": 1.0 / steps_per_s,
+        "datagen_s_per_batch": datagen_s,
+        **loss_summary(losses),
+        "accuracy_last": float(m["accuracy"]),
+        "loss_trajectory": losses[:: max(1, len(losses) // 50)],
+    }
+    report("train_bench/steps_per_s", f"{steps_per_s:.2f}",
+           f"batch={batch} params={rec['n_params']}")
+    report("train_bench/datagen_s_per_batch", f"{datagen_s:.3f}")
+    report("train_bench/loss_first", f"{rec['loss_first']:.4f}")
+    report("train_bench/loss_last", f"{rec['loss_last']:.4f}",
+           f"acc={rec['accuracy_last']:.3f}")
+
+    out_path = os.path.abspath(out or DEFAULT_OUT)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    report("train_bench/out", out_path)
+
+    if smoke:
+        assert all(np.isfinite(losses)), "non-finite training loss"
+        assert rec["loss_last"] < rec["loss_first"], \
+            f"loss did not decrease: {rec['loss_first']} -> {rec['loss_last']}"
+        assert steps_per_s > 0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: few steps + health assertions")
+    ap.add_argument("--arch", default="sim-se2-fourier")
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--out", default=None,
+                    help=f"JSON output path (default {DEFAULT_OUT})")
+    args = ap.parse_args()
+    report = lambda name, val, extra="": print(f"{name},{val},{extra}",
+                                               flush=True)
+    if args.smoke:
+        run(report, arch=args.arch, steps=30, warmup=3, batch=4,
+            n_unique_batches=8, smoke=True, out=args.out)
+    else:
+        run(report, arch=args.arch, steps=args.steps, batch=args.batch,
+            out=args.out)
+
+
+if __name__ == "__main__":
+    main()

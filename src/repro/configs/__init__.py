@@ -1,9 +1,12 @@
 """Architecture configs + shapes. Import side effect: registry population."""
-from repro.configs import archs  # noqa: F401  (registers the 10 architectures)
-from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, all_configs,
-                                get_config, register)
+from repro.configs import archs  # noqa: F401  (registers the architectures)
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, SimArch,
+                                all_configs, all_sim_archs, get_config,
+                                get_sim_arch, register, register_sim)
 
 ARCH_NAMES = sorted(all_configs())
+SIM_ARCH_NAMES = sorted(all_sim_archs())
 
-__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "all_configs",
-           "get_config", "register", "ARCH_NAMES"]
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "SimArch", "all_configs",
+           "all_sim_archs", "get_config", "get_sim_arch", "register",
+           "register_sim", "ARCH_NAMES", "SIM_ARCH_NAMES"]

@@ -6,8 +6,8 @@ DESIGN.md "Assigned architectures" for the reconciliation).
 """
 from __future__ import annotations
 
-from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SSMConfig,
-                                register)
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SimArch,
+                                SSMConfig, register, register_sim)
 
 # --- deepseek-v2-lite-16b [arXiv:2405.04434; hf] ---------------------------
 # 27L d=2048, 16 heads, MLA kv_lora=512, MoE: 64 routed top-6 + 2 shared,
@@ -143,3 +143,21 @@ register(ModelConfig(
     notes="Paper's attention technique inapplicable (attention-free); see "
           "DESIGN.md Arch-applicability.",
 ))
+
+# --- agent-sim architectures (paper Table I rows) ---------------------------
+# One arch per attention mechanism, identical everywhere else, so trained
+# comparisons isolate the encoding (the paper's invariant-vs-absolute
+# claim). ``.reduced()`` gives the CPU-sized variant the train_sim launcher,
+# the train bench, and CI smoke jobs use; the full shapes are what
+# ``launch.dryrun`` lowers on the production mesh alongside the LM arches.
+_SIM_NOTES = {
+    "absolute": "non-invariant baseline: learned Fourier pose embedding "
+                "added to token features",
+    "rope2d": "translation-invariant only (paper Sec. II-D)",
+    "se2_repr": "exact SE(2) invariance via homogeneous-matrix "
+                "representation (Sec. II-E)",
+    "se2_fourier": "the paper's linear-memory SE(2) encoding (Sec. III)",
+}
+for _enc, _note in _SIM_NOTES.items():
+    register_sim(SimArch(name=f"sim-{_enc.replace('_', '-')}",
+                         encoding=_enc, notes=_note))

@@ -190,12 +190,88 @@ SHAPES: Dict[str, ShapeConfig] = {
     "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
 }
 
+@dataclasses.dataclass(frozen=True)
+class SimArch:
+    """Agent-simulation architecture: one row of the paper's Table I.
+
+    Pairs the scene-transformer hyperparameters (an
+    :class:`repro.nn.agent_sim.AgentSimConfig`) with the
+    :class:`repro.scenarios.ScenarioConfig` whose action grid it predicts —
+    the two must agree on ``num_actions`` and the feature dims, so the pair
+    is registered as one unit. Builder methods import lazily (configs must
+    stay importable before jax device init, and ``repro.nn`` imports configs
+    back).
+    """
+    name: str
+    encoding: str                 # absolute | rope2d | se2_repr | se2_fourier
+    d_model: int = 256
+    num_layers: int = 6
+    num_heads: int = 8
+    head_dim: int = 24            # divisible by 6/4/3/2: works for every enc
+    d_ff: int = 1024
+    fourier_terms: int = 12
+    pos_scale: float = 0.05
+    # scenario-side shapes (the model's token budget: num_map + T*A)
+    num_map: int = 48
+    num_agents: int = 12
+    num_steps: int = 24
+    dtype: str = "float32"
+    notes: str = ""
+
+    def scenario_config(self):
+        """The ScenarioConfig this arch trains and evaluates on."""
+        from repro.scenarios.core import ScenarioConfig
+        return ScenarioConfig(num_map=self.num_map,
+                              num_agents=self.num_agents,
+                              num_steps=self.num_steps)
+
+    def agent_sim_config(self):
+        from repro.nn.agent_sim import AgentSimConfig
+        scen = self.scenario_config()
+        return AgentSimConfig(
+            d_model=self.d_model, num_layers=self.num_layers,
+            num_heads=self.num_heads, head_dim=self.head_dim,
+            d_ff=self.d_ff, num_actions=scen.num_actions,
+            agent_feat_dim=scen.agent_feat_dim,
+            map_feat_dim=scen.map_feat_dim,
+            encoding=self.encoding, fourier_terms=self.fourier_terms,
+            pos_scale=self.pos_scale, dtype=self.dtype)
+
+    def reduced(self, **overrides) -> "SimArch":
+        """CPU-sized same-encoding config (mirrors ModelConfig.reduced)."""
+        small: Dict = dict(d_model=64, num_layers=2, num_heads=4,
+                           head_dim=24, d_ff=256,
+                           num_map=16, num_agents=6, num_steps=10,
+                           dtype="float32")
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
 _REGISTRY: Dict[str, ModelConfig] = {}
+_SIM_REGISTRY: Dict[str, SimArch] = {}
 
 
 def register(cfg: ModelConfig) -> ModelConfig:
     _REGISTRY[cfg.name] = cfg
     return cfg
+
+
+def register_sim(arch: SimArch) -> SimArch:
+    _SIM_REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_sim_arch(name: str) -> SimArch:
+    import repro.configs  # noqa: F401  (ensure registrations ran)
+    if name not in _SIM_REGISTRY:
+        raise KeyError(f"unknown sim arch {name!r}; have "
+                       f"{sorted(_SIM_REGISTRY)}")
+    return _SIM_REGISTRY[name]
+
+
+def all_sim_archs() -> Dict[str, SimArch]:
+    import repro.configs  # noqa: F401
+    return dict(_SIM_REGISTRY)
 
 
 def get_config(name: str) -> ModelConfig:

@@ -11,6 +11,7 @@ Design for 1000+ node clusters:
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
 from typing import Any, Callable, Dict, Iterator, Optional
@@ -43,10 +44,22 @@ class ShardedIterator:
 
     # -- checkpointable state ------------------------------------------------
     def state_dict(self) -> Dict[str, int]:
-        return {"cursor": self.cursor, "seed": self.seed}
+        # batch_size / world are recorded for observability: restoring under
+        # a different world is SUPPORTED (elastic re-sharding — the cursor
+        # semantics stay exact), but it changes which records each host sees,
+        # so a mismatch is worth a log line rather than silence.
+        return {"cursor": self.cursor, "seed": self.seed,
+                "batch_size": self.batch_size, "world": self.world}
 
     def load_state_dict(self, state: Dict[str, int]):
         self._drain()
+        for key in ("batch_size", "world"):
+            if key in state and int(state[key]) != getattr(self, key):
+                logging.getLogger("repro.data").warning(
+                    "ShardedIterator restored with %s=%d (checkpoint had "
+                    "%d); cursor semantics stay exact but the record->host "
+                    "assignment changes", key, getattr(self, key),
+                    int(state[key]))
         self.cursor = int(state["cursor"])
         self.seed = int(state["seed"])
 

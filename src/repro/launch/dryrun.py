@@ -34,7 +34,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.configs import (ARCH_NAMES, SHAPES, SIM_ARCH_NAMES, get_config,
+                           get_sim_arch)
 from repro.distributed.sharding import (DEFAULT_RULES, batch_sharding,
                                         derive_opt_shardings,
                                         sharding_for_specs, use_mesh_rules)
@@ -51,6 +52,8 @@ from repro.runtime.steps import (batch_shardings, input_specs,
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
 VARIANT_ITERS = (2, 4)
+SIM_SHAPE = "sim_train"        # the one shape a sim arch lowers
+SIM_TRAIN_BATCH = 256          # global batch for the sim train cell
 
 
 def choose_optimizer(cfg):
@@ -120,6 +123,19 @@ def _analyze(compiled):
             float(cost.get("bytes accessed", 0.0)), coll, mem)
 
 
+def _memory_record(mem):
+    """The shared fits-in-HBM accounting (LM and sim cells must agree)."""
+    memory = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+    }
+    hbm = ((memory["argument_bytes"] or 0)
+           + (memory["temp_bytes"] or 0)) / 1024**3
+    return {"memory": memory, "hbm_per_chip_gib": hbm,
+            "fits_hbm": hbm < HW["hbm_bytes"] / 1024**3}
+
+
 def lower_cell(arch: str, shape_name: str, multi_pod: bool, rules=None):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -142,16 +158,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, rules=None):
         "arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
         "chips": chips, "n_params": n_params, "mode": shape.mode,
         "full_compile_s": t_compile, "full_lower_s": t_lower,
-        "memory": {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-        },
+        **_memory_record(mem),
     }
-    arg_b = record["memory"]["argument_bytes"] or 0
-    tmp_b = record["memory"]["temp_bytes"] or 0
-    record["hbm_per_chip_gib"] = (arg_b + tmp_b) / 1024**3
-    record["fits_hbm"] = record["hbm_per_chip_gib"] < HW["hbm_bytes"] / 1024**3
     del compiled_full
 
     if multi_pod:
@@ -200,6 +208,55 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, rules=None):
     return record
 
 
+def lower_sim_cell(arch: str, multi_pod: bool, rules=None):
+    """AOT proof for an agent-sim arch: compile its sharded BC train step
+    (``repro.training.steps``) on the production mesh.
+
+    This is the sharding-coherence + fits-in-HBM evidence for the new
+    workload. The depth-variant roofline extrapolation is an LM-arch
+    concept (homogeneous scanned groups measured at production width); sim
+    cells record the full compile + memory analysis only, like the
+    multi-pod pass does for LM archs.
+    """
+    from repro.nn.agent_sim import AgentSimModel
+    from repro.training.steps import (make_sim_train_step, sim_batch_shardings,
+                                      sim_input_specs)
+
+    sim = get_sim_arch(arch)
+    cfg = sim.agent_sim_config()
+    scen = sim.scenario_config()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    rules = rules or DEFAULT_RULES
+    model = AgentSimModel(cfg)
+    specs = model.specs()
+    aparams = nnm.abstract_params(specs)
+    opt = chain(clip_by_global_norm(1.0), adamw(3e-4))
+    t0 = time.time()
+    with use_mesh_rules(mesh, rules):
+        param_sh = sharding_for_specs(specs, mesh, rules)
+        ins = sim_input_specs(scen, SIM_TRAIN_BATCH)
+        in_sh = sim_batch_shardings(ins, mesh, rules)
+        opt_abs = jax.eval_shape(opt.init, aparams)
+        opt_sh = derive_opt_shardings(specs, opt_abs, mesh, rules)
+        jitted = jax.jit(make_sim_train_step(model, opt),
+                         in_shardings=(param_sh, opt_sh, in_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(aparams, opt_abs, ins)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    _, _, _, mem = _analyze(compiled)
+    return {
+        "arch": arch, "shape": SIM_SHAPE, "mesh": mesh_name, "status": "ok",
+        "chips": mesh.devices.size, "n_params": nnm.count_params(specs),
+        "mode": "train", "encoding": sim.encoding,
+        "full_compile_s": t_compile, "full_lower_s": t_lower,
+        **_memory_record(mem),
+    }
+
+
 def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=False):
     mesh_name = "multi" if multi_pod else "single"
     os.makedirs(out_dir, exist_ok=True)
@@ -211,7 +268,9 @@ def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=False):
             print(f"[cached] {arch} {shape_name} {mesh_name}", flush=True)
             return rec
     try:
-        rec = lower_cell(arch, shape_name, multi_pod)
+        rec = (lower_sim_cell(arch, multi_pod)
+               if arch in SIM_ARCH_NAMES
+               else lower_cell(arch, shape_name, multi_pod))
     except Exception as e:  # record failures; they are bugs to fix
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "error", "error": f"{type(e).__name__}: {e}",
@@ -240,18 +299,22 @@ def main():
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
-    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    all_archs = ARCH_NAMES + SIM_ARCH_NAMES
+    archs = all_archs if (args.all or args.arch is None) else [args.arch]
     shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
 
+    # a sim arch has exactly one shape (its scenario config fixes the token
+    # budget); LM archs iterate the assigned LM shapes
+    cells = [(a, s) for a in archs
+             for s in ([SIM_SHAPE] if a in SIM_ARCH_NAMES else shapes)]
     failures = 0
-    for arch in archs:
-        for shape in shapes:
-            for mp in meshes:
-                rec = run_cell(arch, shape, mp, args.out,
-                               skip_existing=args.skip_existing)
-                failures += rec["status"] == "error"
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out,
+                           skip_existing=args.skip_existing)
+            failures += rec["status"] == "error"
     print(f"done; {failures} failures")
     raise SystemExit(1 if failures else 0)
 

@@ -49,6 +49,11 @@ def main():
         n_ok += 1
         t = r.get("terms")
         if not t:
+            # compile-proof-only cells (agent-sim train step): no roofline
+            # terms, but the sharding + memory evidence is still a row
+            print(f"| {r['arch']} | {r['shape']} | compiled | | | | | "
+                  f"| {r.get('hbm_per_chip_gib', 0.0):.1f} "
+                  f"| {'Y' if r.get('fits_hbm') else 'N'} |")
             continue
         u = r.get("useful_flops_frac")
         print(f"| {r['arch']} | {r['shape']} | ok | {fmt_ms(t['compute_s'])} "

@@ -17,6 +17,9 @@ Fault-tolerance contract (exercised by tests/test_trainer.py):
   * **preemption hook**: ``should_stop`` is polled each step; on SIGTERM
     (spot eviction) the harness sets it, the trainer checkpoints and exits
     cleanly.
+  * **periodic eval**: every ``eval_every`` steps ``eval_cb(step, params)``
+    runs (e.g. closed-loop rollout metrics through runtime.evaluation);
+    it only reads params, so resume bit-exactness is unaffected.
 """
 from __future__ import annotations
 
@@ -42,6 +45,7 @@ class TrainerConfig:
     log_every: int = 10
     keep_checkpoints: int = 3
     max_consecutive_nans: int = 5
+    eval_every: int = 0            # 0 disables the periodic eval callback
 
 
 class Trainer:
@@ -50,7 +54,8 @@ class Trainer:
                  config: TrainerConfig = TrainerConfig(),
                  metrics_cb: Optional[Callable[[int, Dict], None]] = None,
                  should_stop: Optional[Callable[[], bool]] = None,
-                 param_shardings=None):
+                 param_shardings=None,
+                 eval_cb: Optional[Callable[[int, Any], None]] = None):
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state
@@ -59,6 +64,7 @@ class Trainer:
         self.ckpt = CheckpointManager(ckpt_dir, keep=config.keep_checkpoints)
         self.metrics_cb = metrics_cb or (lambda s, m: None)
         self.should_stop = should_stop or (lambda: False)
+        self.eval_cb = eval_cb
         self.param_shardings = param_shardings
         self.step = 0
         self.timer = StepTimer()
@@ -122,6 +128,11 @@ class Trainer:
                                             "sec_per_step": self.timer.median})
             if self.step % cfg.ckpt_every == 0:
                 self._save()
+            # periodic evaluation (e.g. closed-loop rollout metrics): reads
+            # params only, so it cannot perturb the bit-exact resume contract
+            if (cfg.eval_every and self.eval_cb is not None
+                    and self.step % cfg.eval_every == 0):
+                self.eval_cb(self.step, self.params)
         self._save()
         self.ckpt.wait()
         return {"status": "done", "step": self.step,

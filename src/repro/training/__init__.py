@@ -1,0 +1,27 @@
+"""Behavior-cloning training for the SE(2) agent-sim model.
+
+The learn side of the scenario suite: expert demonstrations come from the
+rule-based reference policies (``repro.scenarios.policies``) rolled over
+every registered family, the model is trained by teacher-forced
+next-action NLL under the block-causal scene mask, and the result is
+evaluated both open-loop (held-out NLL / accuracy) and closed-loop
+(``repro.runtime.evaluation``). ``comparison.run_comparison`` trains every
+Table-I encoding plus the ``absolute`` baseline under identical budgets —
+the paper's headline invariant-vs-non-invariant table.
+
+Entry point: ``python -m repro.launch.train_sim`` (see docs/training.md).
+"""
+from repro.training.data import (TRAIN_KEYS, holdout_batches, make_batch_fn,
+                                 make_sim_batch)
+from repro.training.steps import (make_sim_eval_step, make_sim_train_step,
+                                  open_loop_metrics, sim_batch_shardings,
+                                  sim_input_specs)
+from repro.training.comparison import (COMPARISON_ENCODINGS, format_table,
+                                       run_comparison, train_one)
+
+__all__ = [
+    "TRAIN_KEYS", "holdout_batches", "make_batch_fn", "make_sim_batch",
+    "make_sim_eval_step", "make_sim_train_step", "open_loop_metrics",
+    "sim_batch_shardings", "sim_input_specs",
+    "COMPARISON_ENCODINGS", "format_table", "run_comparison", "train_one",
+]

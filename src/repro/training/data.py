@@ -1,0 +1,80 @@
+"""Expert-demonstration dataset: scenario-family rollouts as training batches.
+
+The demonstrations are the rule-based reference policies of
+``repro.scenarios.policies`` (IDM gap keeping + pure pursuit + yielding)
+rolled over every registered family. Their actions are *already* exact
+labels in the model's discrete (accel x yaw-rate) vocabulary: the
+simulate() loop snaps each command to the scenario grid and integrates the
+quantized action, so behavior cloning has zero label noise from
+discretization.
+
+Batches satisfy the :class:`repro.data.pipeline.ShardedIterator` contract —
+``make_batch(seed, start_index, batch_size)`` is a pure function of its
+arguments (all randomness flows through ``registry.family_rng``), so the
+training stream is deterministic, restartable from the integer cursor
+alone, and shards across data-loader hosts with no coordination. Families
+are interleaved deterministically by index (``registry.generate_mixed``),
+every scene pads to the config's static shapes, and validity masks carry
+the per-scene variation — one compiled train step serves all families.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.scenarios import registry
+from repro.scenarios.core import ScenarioConfig
+
+__all__ = ["TRAIN_KEYS", "make_sim_batch", "make_batch_fn",
+           "holdout_batches", "HOLDOUT_SEED_OFFSET"]
+
+# The model-facing subset of a Scene's tensors: everything AgentSimModel
+# tokenizes plus the action labels and the loss mask. Host-side metadata
+# (behavior categories, agent types, lane graphs) stays out of the device
+# batch — closed-loop evaluation regenerates scenes with full metadata.
+TRAIN_KEYS = ("map_feats", "map_pose", "map_valid",
+              "agent_feats", "agent_pose", "agent_valid", "actions")
+
+# Held-out batches draw from a far-away seed, not a far-away index: index
+# offsets collide with the training stream under a different world size /
+# batch size, a disjoint seed never does (family_rng salts by seed).
+HOLDOUT_SEED_OFFSET = 100_003
+
+
+def make_sim_batch(seed: int, start_index: int, batch_size: int,
+                   scen: ScenarioConfig,
+                   families: Optional[Sequence[str]] = None
+                   ) -> Dict[str, np.ndarray]:
+    """One mixed-family expert batch with the ShardedIterator signature.
+
+    Returns the TRAIN_KEYS dict of stacked static-shape arrays:
+    map_feats (B, M, Fm), map_pose (B, M, 3), map_valid (B, M),
+    agent_feats (B, T, A, Fa), agent_pose (B, T, A, 3),
+    agent_valid (B, T, A), actions (B, T, A) int32.
+    """
+    batch = registry.generate_mixed_batch(seed, start_index, batch_size,
+                                          scen, families)
+    return {k: batch[k] for k in TRAIN_KEYS}
+
+
+def make_batch_fn(scen: ScenarioConfig,
+                  families: Optional[Sequence[str]] = None):
+    """Bind config + families into the pure ``(seed, index, batch) -> dict``
+    the ShardedIterator consumes."""
+    fams = tuple(families) if families is not None else None
+
+    def make_batch(seed: int, start_index: int, batch_size: int):
+        return make_sim_batch(seed, start_index, batch_size, scen, fams)
+
+    return make_batch
+
+
+def holdout_batches(scen: ScenarioConfig, batch_size: int, n_batches: int,
+                    seed: int = 0,
+                    families: Optional[Sequence[str]] = None):
+    """Deterministic held-out batches for open-loop evaluation, on a seed
+    stream disjoint from any training cursor position."""
+    return [make_sim_batch(seed + HOLDOUT_SEED_OFFSET, i * batch_size,
+                           batch_size, scen, families)
+            for i in range(n_batches)]

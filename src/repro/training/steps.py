@@ -1,0 +1,159 @@
+"""Sharded agent-sim train/eval steps (the BC analogue of runtime.steps).
+
+``make_sim_train_step`` mirrors :func:`repro.runtime.steps.make_train_step`
+exactly where it matters at scale: parameters are cast to the compute
+dtype *inside* the loss (on the FSDP-sharded storage, so weight
+all-gathers and the matmul-transpose gradient reductions move the compute
+dtype, not f32), the loss is the validity-masked ``action_nll`` over
+teacher-forced logits, and the model's attention is block-causal over
+simulation times (``SimAttention`` with ``causal=True``) — the same mask
+the incremental rollout cache relies on, so training and closed-loop
+deployment see identical attention semantics.
+
+Input sharding goes through the logical-axis rules
+(``distributed.sharding``): every batch tensor is batch-leading and shards
+over the (pod, data) axes via ``batch_sharding``; parameter/optimizer
+shardings come from the ParamSpec logical axes like every other model in
+the repo. ``sim_input_specs`` provides the ShapeDtypeStruct stand-ins the
+AOT dry-run lowers at 512 devices without allocating anything.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import batch_sharding
+from repro.nn.agent_sim import AgentSimModel, action_nll
+from repro.nn.module import cast_params
+from repro.optim.transforms import Optimizer, apply_updates
+from repro.scenarios.core import ScenarioConfig
+from repro.training.data import TRAIN_KEYS
+
+__all__ = ["bc_optimizer", "loss_summary", "make_sim_train_step",
+           "make_sim_eval_step", "open_loop_metrics", "sim_input_specs",
+           "sim_batch_shardings"]
+
+
+def bc_optimizer(lr: float, steps: int) -> Optimizer:
+    """The one BC optimizer recipe, shared by the launcher and the
+    comparison harness so 'identical budgets' stays true by construction:
+    global-norm clip + AdamW on a warmup-cosine schedule."""
+    from repro.optim import adamw, chain, clip_by_global_norm, warmup_cosine
+    warmup = max(1, min(20, steps // 10))
+    return chain(clip_by_global_norm(1.0),
+                 adamw(warmup_cosine(lr, warmup, steps)))
+
+
+def loss_summary(history: Sequence[float]) -> Dict[str, float]:
+    """Endpoint means of a loss trajectory (k-step windows), the shared
+    'did training move' summary."""
+    k = max(1, min(5, len(history) // 2))
+    return {
+        "loss_first": float(np.mean(history[:k])) if len(history) else
+        float("nan"),
+        "loss_last": float(np.mean(history[-k:])) if len(history) else
+        float("nan"),
+    }
+
+
+def _masked_accuracy(logits, actions, valid):
+    """Fraction of valid agent steps whose argmax action matches the
+    expert's — the cheap scalar that makes loss curves comparable across
+    action-grid sizes."""
+    pred = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+    w = valid.astype(jnp.float32)
+    hit = (pred == actions).astype(jnp.float32)
+    return jnp.sum(hit * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def make_sim_train_step(model: AgentSimModel,
+                        optimizer: Optimizer) -> Callable:
+    """One BC update: teacher-forced masked NLL -> grads -> optimizer."""
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p32):
+            p = cast_params(p32, cfg.compute_dtype)
+            logits, aux = model(p, batch)
+            loss = action_nll(logits, batch["actions"], batch["agent_valid"])
+            return loss + aux, (loss, logits)
+
+        (_, (loss, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "accuracy": _masked_accuracy(logits, batch["actions"],
+                                                batch["agent_valid"])}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_sim_eval_step(model: AgentSimModel) -> Callable:
+    """Open-loop evaluation on one batch: masked NLL + argmax accuracy."""
+    cfg = model.cfg
+
+    def eval_step(params, batch):
+        p = cast_params(params, cfg.compute_dtype)
+        logits, _ = model(p, batch)
+        return {
+            "nll": action_nll(logits, batch["actions"],
+                              batch["agent_valid"]),
+            "accuracy": _masked_accuracy(logits, batch["actions"],
+                                         batch["agent_valid"]),
+        }
+
+    return eval_step
+
+
+def open_loop_metrics(model: AgentSimModel, params,
+                      batches: Sequence[Dict[str, Any]],
+                      eval_fn: Optional[Callable] = None
+                      ) -> Dict[str, float]:
+    """Mean open-loop NLL / accuracy over a list of (host) batches.
+
+    Pass a pre-jitted ``eval_fn`` when calling repeatedly (periodic eval
+    inside a training run) — a fresh ``jax.jit`` wrapper per call would
+    recompile every time.
+    """
+    if not batches:
+        return {"nll": float("nan"), "accuracy": float("nan")}
+    if eval_fn is None:
+        eval_fn = jax.jit(make_sim_eval_step(model))
+    rows = []
+    for b in batches:
+        rows.append({k: float(v) for k, v in
+                     eval_fn(params, {k: jnp.asarray(v)
+                                      for k, v in b.items()}).items()})
+    return {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
+
+
+def sim_input_specs(scen: ScenarioConfig, batch_size: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one training batch (dry-run input)."""
+    b, m = batch_size, scen.num_map
+    t, a = scen.num_steps, scen.num_agents
+    f32, i32, bl = jnp.float32, jnp.int32, jnp.bool_
+    shapes = {
+        "map_feats": ((b, m, scen.map_feat_dim), f32),
+        "map_pose": ((b, m, 3), f32),
+        "map_valid": ((b, m), bl),
+        "agent_feats": ((b, t, a, scen.agent_feat_dim), f32),
+        "agent_pose": ((b, t, a, 3), f32),
+        "agent_valid": ((b, t, a), bl),
+        "actions": ((b, t, a), i32),
+    }
+    assert set(shapes) == set(TRAIN_KEYS)
+    return {k: jax.ShapeDtypeStruct(*v) for k, v in shapes.items()}
+
+
+def sim_batch_shardings(specs: Dict[str, Any], mesh, rules=None):
+    """NamedShardings for a batch-leading sim batch (every leaf shards its
+    first axis over the DP axes, mirroring runtime.steps.batch_shardings)."""
+    return {k: batch_sharding(mesh, v.shape, rules)
+            for k, v in specs.items()}

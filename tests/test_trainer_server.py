@@ -10,11 +10,15 @@ from repro.configs.base import ModelConfig
 from repro.data import synthetic_lm
 from repro.data.pipeline import ShardedIterator
 from repro.nn import module as nnm
+from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
 from repro.nn.transformer import TransformerLM
 from repro.optim import adamw, chain, clip_by_global_norm
 from repro.runtime.steps import make_train_step
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.server import Request, Server
+from repro.scenarios import ScenarioConfig
+from repro.training.data import make_batch_fn
+from repro.training.steps import make_sim_train_step
 
 CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
                   num_q_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
@@ -103,6 +107,63 @@ def test_nan_guard_skips_bad_batches(tmp_path):
     assert tr.nan_guard.total_skipped == 2
     assert len(tr.history) == 10 - 2
     tr.data.close()
+
+
+SIM_SCEN = ScenarioConfig(num_map=8, num_agents=3, num_steps=6)
+
+
+def make_sim_everything(tmp_path, total_steps=20, seed=0):
+    """The agent-sim analogue of make_everything: same Trainer, the BC
+    train step + scenario-family expert stream instead of the LM pair."""
+    cfg = AgentSimConfig(d_model=32, num_layers=2, num_heads=2, head_dim=12,
+                         d_ff=64, num_actions=SIM_SCEN.num_actions,
+                         encoding="se2_fourier", attn_impl="ref")
+    model = AgentSimModel(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(seed))
+    opt = chain(clip_by_global_norm(1.0), adamw(3e-3))
+    step = jax.jit(make_sim_train_step(model, opt))
+    data = ShardedIterator(make_batch_fn(SIM_SCEN), batch_size=2, seed=0)
+    tr = Trainer(step, params, opt.init(params), data, str(tmp_path),
+                 TrainerConfig(total_steps=total_steps, ckpt_every=5,
+                               log_every=100))
+    return tr
+
+
+def test_sim_checkpoint_restart_bit_exact(tmp_path):
+    """Kill-and-resume on the agent-sim BC step: identical loss history
+    (=> identical data order) and identical final params."""
+    tr_full = make_sim_everything(tmp_path / "full", total_steps=20)
+    tr_full.run()
+    full_hist = list(tr_full.history)
+    # crash after 10 (simulated via total_steps=10), then resume to 20
+    tr_a = make_sim_everything(tmp_path / "resume", total_steps=10)
+    tr_a.run()
+    tr_b = make_sim_everything(tmp_path / "resume", total_steps=20)
+    assert tr_b.restore_if_available()
+    assert tr_b.step == 10
+    assert tr_b.data.cursor == 10    # data cursor rides the checkpoint
+    tr_b.run()
+    np.testing.assert_allclose(full_hist[10:], tr_b.history, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(tr_full.params),
+                    jax.tree.leaves(tr_b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    tr_full.data.close(); tr_a.data.close(); tr_b.data.close()
+
+
+def test_sim_trainer_periodic_eval_hook(tmp_path):
+    """The eval hook fires on cadence and must not perturb training: a run
+    with an eval_cb produces the same loss history as one without."""
+    calls = []
+    tr = make_sim_everything(tmp_path / "a", total_steps=10)
+    tr.config = TrainerConfig(total_steps=10, ckpt_every=100, log_every=100,
+                              eval_every=4)
+    tr.eval_cb = lambda step, params: calls.append(step)
+    tr.run()
+    assert calls == [4, 8]
+    ref = make_sim_everything(tmp_path / "b", total_steps=10)
+    ref.run()
+    np.testing.assert_allclose(tr.history, ref.history, rtol=1e-6)
+    tr.data.close(); ref.data.close()
 
 
 def test_server_continuous_batching():
