@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import encodings
 from repro.kernels import ops, ref
+from repro.kernels.flash_decode import dequantize_kv, quantize_kv
 from repro.kernels.se2_project import se2_fourier_project
 
 
@@ -108,7 +109,102 @@ def _bench_se2(report):
     assert err < 1e-4, err
 
 
-def run(report, mode: str = "all"):
+def _bench_decode(report, smoke: bool = False):
+    """Decode-shape micro-times + split-K kernel parity.
+
+    Times the two CPU-executable decode paths at the rollout shape (tiny
+    q, huge preallocated cache, cursor-bounded live prefix):
+
+      * the generic ``kv_length``-masked full-cache scan (what decode
+        paid before the ragged kernel — O(max_len) per call), and
+      * ``ops.decode_attention(impl="xla")`` — the cursor-bounded ragged
+        path (O(live prefix)), for f32 and int8 caches,
+
+    then re-times the ragged path with the cache preallocation 4x larger
+    at the *same* cursor: the reported ``flatness`` ratio is the direct
+    micro-scale measurement of the O(live)-not-O(max_len) claim (the
+    engine-level regression assertion lives in ``rollout_bench``).
+    Finally it pins the Pallas split-K kernel (interpret mode) against
+    the O(S^2) oracle, for f32 and int8-with-scales caches.
+    """
+    rng = np.random.default_rng(0)
+    b, h, sq, d = (2, 4, 8, 32) if smoke else (4, 8, 16, 64)
+    smax = 1024 if smoke else 4096
+    cursor = smax // 8
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), jnp.float32)
+
+    def cache(s):
+        k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+        k_times = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return k, v, k_times
+
+    k, v, k_times = cache(smax)
+    q_times = jnp.broadcast_to(
+        cursor - sq + jnp.arange(sq, dtype=jnp.int32), (b, sq))
+    kvl = jnp.full((b,), cursor, jnp.int32)
+    kw = dict(kv_length=kvl, q_times=q_times, k_times=k_times)
+
+    generic = jax.jit(lambda q, k, v: ops.attention(
+        q, k, v, impl="chunked", causal=True, **kw))
+    ragged = jax.jit(lambda q, k, v: ops.decode_attention(
+        q, k, v, impl="xla", **kw))
+    t_gen = _time(generic, q, k, v)
+    t_rag = _time(ragged, q, k, v)
+    report("kernels/decode_generic_fullscan_us", t_gen * 1e6,
+           f"smax={smax} cursor={cursor}")
+    report("kernels/decode_ragged_xla_us", t_rag * 1e6,
+           f"smax={smax} cursor={cursor}")
+    report("kernels/decode_ragged_speedup", f"{t_gen / t_rag:.2f}")
+
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    ragged_i8 = jax.jit(lambda q, k, v, ks, vs: ops.decode_attention(
+        q, k, v, impl="xla", k_scale=ks, v_scale=vs, **kw))
+    report("kernels/decode_ragged_xla_int8_us",
+           _time(ragged_i8, q, kq, vq, ks, vs) * 1e6)
+
+    # flat-in-max_len at fixed cursor: same live prefix, 4x preallocation
+    k4, v4, k4_times = cache(4 * smax)
+    ragged4 = jax.jit(lambda q, k, v: ops.decode_attention(
+        q, k, v, impl="xla", kv_length=kvl, q_times=q_times,
+        k_times=k4_times))
+    t_rag4 = _time(ragged4, q, k4, v4)
+    report("kernels/decode_ragged_flatness", f"{t_rag4 / t_rag:.2f}",
+           f"time at 4x max_len / time at 1x (1.0 = perfectly flat)")
+
+    # Pallas split-K kernel parity (interpret mode) against the oracle,
+    # f32 and int8 caches, at a multi-split shape
+    s_par, blk, nsp = (256, 64, 2) if smoke else (512, 64, 4)
+    qs = q[:1, :, :, :]
+    kk, vv, tt = cache(s_par)
+    kk, vv, tt = kk[:1], vv[:1], tt[:1]
+    kvl_s = jnp.asarray([s_par - 37], jnp.int32)
+    qt = jnp.broadcast_to(s_par - sq + jnp.arange(sq, dtype=jnp.int32),
+                          (1, sq))
+    got = ops.decode_attention(qs, kk, vv, impl="flash_decode",
+                               kv_length=kvl_s, q_times=qt, k_times=tt,
+                               block_k=blk, num_splits=nsp, interpret=True)
+    want = ref.mha_reference(qs, kk, vv, causal=True, q_times=qt, k_times=tt,
+                             kv_length=kvl_s)
+    err = float(jnp.max(jnp.abs(got - want)))
+    report("kernels/flash_decode_interpret_parity_maxerr", err)
+    assert err < 1e-4, err
+    kq1, ks1 = quantize_kv(kk)
+    vq1, vs1 = quantize_kv(vv)
+    got8 = ops.decode_attention(qs, kq1, vq1, impl="flash_decode",
+                                k_scale=ks1, v_scale=vs1, kv_length=kvl_s,
+                                q_times=qt, k_times=tt, block_k=blk,
+                                num_splits=nsp, interpret=True)
+    want8 = ref.mha_reference(qs, dequantize_kv(kq1, ks1),
+                              dequantize_kv(vq1, vs1), causal=True,
+                              q_times=qt, k_times=tt, kv_length=kvl_s)
+    err8 = float(jnp.max(jnp.abs(got8 - want8)))
+    report("kernels/flash_decode_int8_parity_maxerr", err8)
+    assert err8 < 1e-4, err8
+
+
+def run(report, mode: str = "all", smoke: bool = False):
     rng = np.random.default_rng(0)
     b, h, s, d = 1, 4, 1024, 64
     q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
@@ -120,11 +216,16 @@ def run(report, mode: str = "all"):
         _bench_se2(report)
     if mode in ("bwd", "all"):
         _bench_bwd(report, q, k, v)
+    if mode in ("decode", "all"):
+        _bench_decode(report, smoke=smoke)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("fwd", "bwd", "all"), default="all")
+    ap.add_argument("--mode", choices=("fwd", "bwd", "decode", "all"),
+                    default="all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized decode shapes")
     args = ap.parse_args()
     run(lambda name, val, extra="": print(f"{name},{val},{extra}"),
-        mode=args.mode)
+        mode=args.mode, smoke=args.smoke)

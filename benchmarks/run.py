@@ -9,9 +9,19 @@ Prints ``name,value,notes`` CSV rows. Modules:
                        scenario suite (minADE/miss/collision/off-road)
   train_bench        — BC trainer throughput (steps/s, datagen cost, loss
                        trajectory) -> BENCH_train.json
+  rollout_bench      — cached-decode throughput: ragged decode kernel vs
+                       generic full-cache scan, cache-dtype sweep,
+                       flat-in-max_len regression -> BENCH_rollout.json
   adaptive_basis     — beyond-paper: scale-adaptive basis truncation
   kernel_bench       — kernel micro-times + Pallas/oracle parity
+                       (fwd, bwd, and ragged-decode modes)
   roofline_summary   — aggregates experiments/dryrun/*.json if present
+
+Every registered benchmark additionally persists its CSV rows as
+``BENCH_<name>.json`` at the repo root (status, elapsed, and the rows it
+printed), so successive PRs accumulate a machine-readable perf
+trajectory for *all* benchmarks, not just the ones that write their own
+rich records (train_bench/rollout_bench keep doing that too).
 """
 from __future__ import annotations
 
@@ -58,6 +68,20 @@ def roofline_summary(report):
     report("roofline/cells_error", n_err)
 
 
+def _persist(name: str, rows, elapsed_s: float, status: str,
+             error: str = "") -> str:
+    """Write one benchmark's CSV rows to BENCH_<name>.json (repo root)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "..", f"BENCH_{name}.json")
+    rec = {"benchmark": name, "status": status,
+           "elapsed_s": round(elapsed_s, 2), "rows": rows}
+    if error:
+        rec["error"] = error
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return os.path.abspath(path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -65,38 +89,64 @@ def main() -> None:
     ap.add_argument("--table1-steps", type=int, default=150)
     ap.add_argument("--scenario-train-steps", type=int, default=100)
     ap.add_argument("--train-bench-steps", type=int, default=80)
+    ap.add_argument("--rollout-smoke", action="store_true",
+                    help="run rollout_bench at CI (smoke) size")
     args = ap.parse_args()
 
     from benchmarks import (adaptive_basis, agent_sim_table1, approx_error,
-                            attention_scaling, kernel_bench, scenario_eval,
-                            train_bench)
+                            attention_scaling, kernel_bench, rollout_bench,
+                            scenario_eval, train_bench)
+
+    def run_rollout(report):
+        if args.rollout_smoke:
+            # smoke numbers go to /tmp so they never clobber the
+            # committed full-size BENCH_rollout.json record
+            return rollout_bench.run(report, num_agents=8, num_steps=32,
+                                     num_map=8, n_scenes=2, n_samples=2,
+                                     overalloc=4, reps=3, min_speedup=1.2,
+                                     max_flat_dev=0.5, smoke=True,
+                                     out="/tmp/BENCH_rollout_smoke.json")
+        return rollout_bench.run(report, reps=2, min_speedup=2.0,
+                                 max_flat_dev=0.2)
 
     benches = {
-        "approx_error": lambda: approx_error.run(_report),
-        "attention_scaling": lambda: attention_scaling.run(_report),
-        "adaptive_basis": lambda: adaptive_basis.run(_report),
-        "kernel_bench": lambda: kernel_bench.run(_report),
-        "agent_sim_table1": lambda: agent_sim_table1.run(
-            _report, steps=args.table1_steps),
-        "scenario_eval": lambda: scenario_eval.run(
-            _report, train_steps=args.scenario_train_steps),
-        "train_bench": lambda: train_bench.run(
-            _report, steps=args.train_bench_steps),
-        "roofline_summary": lambda: roofline_summary(_report),
+        "approx_error": lambda r: approx_error.run(r),
+        "attention_scaling": lambda r: attention_scaling.run(r),
+        "adaptive_basis": lambda r: adaptive_basis.run(r),
+        "kernel_bench": lambda r: kernel_bench.run(r),
+        "agent_sim_table1": lambda r: agent_sim_table1.run(
+            r, steps=args.table1_steps),
+        "scenario_eval": lambda r: scenario_eval.run(
+            r, train_steps=args.scenario_train_steps),
+        "train_bench": lambda r: train_bench.run(
+            r, steps=args.train_bench_steps),
+        "rollout_bench": run_rollout,
+        "roofline_summary": lambda r: roofline_summary(r),
     }
     only = set(args.only.split(",")) if args.only else set(benches)
     failures = 0
     for name, fn in benches.items():
         if name not in only:
             continue
+        rows = []
+
+        def report(n, value, extra=""):
+            _report(n, value, extra)
+            rows.append({"name": str(n), "value": str(value),
+                         "notes": str(extra)})
+
         t0 = time.time()
         try:
-            fn()
-            _report(f"{name}/elapsed_s", f"{time.time() - t0:.1f}")
+            fn(report)
+            elapsed = time.time() - t0
+            _report(f"{name}/elapsed_s", f"{elapsed:.1f}")
+            _persist(name, rows, elapsed, "ok")
         except Exception as e:
             failures += 1
             _report(f"{name}/FAILED", type(e).__name__, str(e)[:200])
             traceback.print_exc(file=sys.stderr)
+            _persist(name, rows, time.time() - t0, "failed",
+                     f"{type(e).__name__}: {e}")
     if failures:
         raise SystemExit(1)
 

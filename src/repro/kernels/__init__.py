@@ -12,6 +12,10 @@ reuse an unmodified flash-attention kernel (Alg. 2). Accordingly:
   * ``se2_project``          — fused SE(2) Fourier query/key projection
     (the Alg. 2 pre-processing, which otherwise materializes ~8x-expanded
     intermediates in HBM).
+  * ``flash_decode``         — split-K ragged decode kernel for the
+    rollout hot path (cursor-bounded scanning over preallocated caches,
+    in-kernel dequantization of int8/bf16 KV), plus the cursor-bounded
+    XLA twin and the KV quantization helpers.
   * ``ops``                  — padded, autodiff-capable public wrappers +
     implementation dispatcher used by the model stack.
   * ``ref``                  — pure-jnp oracles the kernels are validated
@@ -19,11 +23,14 @@ reuse an unmodified flash-attention kernel (Alg. 2). Accordingly:
 
 See ``docs/kernels.md`` for the tiling and memory model.
 """
-from repro.kernels import (flash_attention, flash_attention_bwd, ops, ref,
-                           se2_project)
-from repro.kernels.ops import attention, flash_attention as flash_attention_op
+from repro.kernels import (flash_attention, flash_attention_bwd, flash_decode,
+                           ops, ref, se2_project)
+from repro.kernels.flash_decode import dequantize_kv, quantize_kv
+from repro.kernels.ops import (attention, decode_attention,
+                               flash_attention as flash_attention_op)
 from repro.kernels.se2_project import se2_fourier_project
 
-__all__ = ["flash_attention", "flash_attention_bwd", "ops", "ref",
-           "se2_project", "attention", "flash_attention_op",
-           "se2_fourier_project"]
+__all__ = ["flash_attention", "flash_attention_bwd", "flash_decode", "ops",
+           "ref", "se2_project", "attention", "decode_attention",
+           "flash_attention_op", "se2_fourier_project", "quantize_kv",
+           "dequantize_kv"]

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import flash_attention_bwd as fab
+from repro.kernels import flash_decode as fd
 from repro.kernels import ref
 
 #: Default backend for the flash-attention backward pass. ``"pallas"`` runs
@@ -46,15 +47,9 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_to(x, multiple, axis, value=0.0):
-    size = x.shape[axis]
-    rem = size % multiple
-    if rem == 0:
-        return x, 0
-    pad = multiple - rem
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value), pad
+# the single padding implementation for the kernels package lives next to
+# the decode kernel (this module imports it; the reverse would be a cycle)
+_pad_to = fd.pad_to_multiple
 
 
 def _decode_block_q(sq: int, block_q: int) -> int:
@@ -79,6 +74,17 @@ def _fold_kv_length(kv_length, q_seg, k_seg, b, sq, sk):
     rejects — the same mechanism that hides padded key rows. This reuses
     the existing kernel feature set instead of threading another operand
     through the Pallas call (and through the custom_vjp residuals).
+
+    **Cost caveat**: the fold only changes the *mask*, not the iteration
+    space. The generic kernel (and ``ref.mha_chunked``) still fetches and
+    multiplies every KV block of the preallocated cache — dead rows are
+    rejected after their HBM load and MXU work are already paid, so a
+    decode tick costs O(max_len) regardless of the cursor. That is fine
+    for training-shaped calls (the cache IS the sequence) but wrong for
+    the rollout hot path; :func:`decode_attention` dispatches decode
+    shapes to the split-K ragged kernel (``flash_decode.py``), which
+    bounds both loads and FLOPs by the live prefix and keeps this path
+    only as the parity oracle / fallback.
     """
     kvl = jnp.asarray(kv_length, jnp.int32)
     if kvl.ndim == 0:
@@ -348,6 +354,89 @@ def flash_attention(q, k, v, *, causal: bool = False,
     return _flash(q, k, v, q_segment_ids, k_segment_ids, q_times, k_times,
                   causal, window, softcap, scale, block_q, block_k, interpret,
                   bwd_impl)
+
+
+# ---------------------------------------------------------------------------
+# Decode dispatcher: small-q attention over a partially-written KV cache.
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, *, kv_length, impl: str = "auto",
+                     scale: Optional[float] = None,
+                     q_segment_ids=None, k_segment_ids=None,
+                     q_times=None, k_times=None,
+                     k_scale=None, v_scale=None,
+                     block_k: int = 128,
+                     num_splits: Optional[int] = None,
+                     interpret: Optional[bool] = None,
+                     layer: Optional[int] = None):
+    """Attention for the incremental-decode shape: a handful of query
+    tokens against a preallocated (and possibly quantized) KV cache whose
+    live prefix is bounded by per-row ``kv_length`` cursors.
+
+    ``impl`` selects:
+
+      * ``"auto"``         — ``"flash_decode"`` on TPU, ``"xla"`` elsewhere.
+      * ``"flash_decode"`` — the Pallas split-K ragged kernel
+        (``repro.kernels.flash_decode``): O(live-prefix) loads and FLOPs,
+        in-kernel dequantization of int8 caches.
+      * ``"xla"``          — the same cursor-bounded algorithm as a pure-XLA
+        ``fori_loop`` over live key blocks (dynamic trip count); the
+        production path on CPU.
+      * ``"ref"`` / ``"chunked"`` / ``"flash"`` — the *generic* kernels with
+        ``kv_length`` folded into the mask. These scan the whole
+        preallocated cache every call (see :func:`_fold_kv_length`) and are
+        kept as the parity oracle for every decode flag combination —
+        quantized caches are dequantized up front with
+        :func:`flash_decode.dequantize_kv` before the generic call.
+
+    ``k_scale``/``v_scale`` (B, Hkv, Sk) float32 mark ``k``/``v`` as int8
+    caches with per-(head, token) scales. ``layer`` (static int) marks
+    ``k``/``v`` (and scales) as the model's layer-stacked
+    ``(L, B, Hkv, Sk, .)`` cache buffers, which the ragged paths index in
+    place — the per-layer slice is never materialized (the generic
+    fallbacks *do* materialize it; they are O(max_len) oracles either
+    way). Masking semantics (block-causal ``q_times``/``k_times``,
+    segment ids, GQA) match :func:`attention` with ``causal=True``;
+    decode is inference-only, so none of these paths define a VJP.
+    """
+    if impl == "auto":
+        impl = "flash_decode" if jax.default_backend() == "tpu" else "xla"
+    if impl == "flash_decode":
+        if interpret is None:
+            interpret = _default_interpret()
+        return fd.flash_decode(
+            q, k, v, kv_length, k_scale=k_scale, v_scale=v_scale,
+            q_segment_ids=q_segment_ids, k_segment_ids=k_segment_ids,
+            q_times=q_times, k_times=k_times, scale=scale,
+            block_k=block_k, num_splits=num_splits, interpret=interpret,
+            layer=layer)
+    if impl == "xla":
+        return fd.decode_ragged_xla(
+            q, k, v, kv_length, k_scale=k_scale, v_scale=v_scale,
+            q_segment_ids=q_segment_ids, k_segment_ids=k_segment_ids,
+            q_times=q_times, k_times=k_times, scale=scale, block_k=block_k,
+            layer=layer)
+    if impl in ("ref", "chunked", "flash"):
+        if layer is not None:
+            k = k[layer]
+            v = v[layer]
+            k_scale = None if k_scale is None else k_scale[layer]
+            v_scale = None if v_scale is None else v_scale[layer]
+        if k_scale is not None:
+            k = fd.dequantize_kv(k, k_scale, dtype=q.dtype)
+        if v_scale is not None:
+            v = fd.dequantize_kv(v, v_scale, dtype=q.dtype)
+        # Causality in decode is expressed through explicit times (the
+        # query rows are *appended* tokens — their positional indices
+        # 0..Sq-1 say nothing about where they sit in the cache). With no
+        # times, the structural mask is the cursor bound (+ segments).
+        return attention(q, k, v, impl=impl, causal=q_times is not None,
+                         scale=scale,
+                         q_segment_ids=q_segment_ids,
+                         k_segment_ids=k_segment_ids,
+                         q_times=q_times, k_times=k_times,
+                         kv_length=kv_length, block_k=block_k)
+    raise ValueError(f"unknown decode_attention impl {impl!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ from repro.core import se2
 from repro.core.encodings import GroupEncoding, make_encoding
 from repro.distributed.sharding import logical_constraint
 from repro.kernels import ops as kops
+from repro.kernels.flash_decode import canonical_cache_dtype, quantize_kv
 from repro.nn.attention import _merge_heads, _split_heads
 from repro.nn.layers import Dense, RMSNorm
 from repro.nn.mlp import GatedMLP
@@ -56,6 +57,11 @@ class AgentSimConfig:
     max_scale: float = 1.0
     pos_scale: float = 0.05       # world meters -> encoder units (<= 4)
     attn_impl: str = "ref"        # scenes are small; ref is fine on CPU
+    #: attention impl for the cached decode path (``kops.decode_attention``
+    #: names: "auto" / "flash_decode" / "xla" / "ref" / "chunked").
+    #: None falls back to ``attn_impl`` — the pre-decode-kernel behavior,
+    #: which scans the whole preallocated cache and is kept as the oracle.
+    decode_impl: Optional[str] = None
     dtype: str = "float32"
 
     @property
@@ -72,6 +78,29 @@ def _scatter_rows(buf, new, cursor):
     return jax.vmap(
         lambda b_, u, i: jax.lax.dynamic_update_slice_in_dim(
             b_, u, i, axis=axis - 1))(buf, new, cursor)
+
+
+def _scatter_layer_rows(buf, layer, new, cursor):
+    """Write one layer's new rows into the *stacked* cache in place.
+
+    buf (L, B, H, S, c) or (L, B, H, S); new (B, H, n, c) / (B, H, n);
+    layer a static int; cursor (B,). A chain of per-slot
+    ``dynamic_update_slice`` ops, each touching only the n written rows
+    of (layer, slot) — under jit with a donated cache the whole update
+    is O(B * n), not O(max_len). The tempting alternatives both
+    silently copy the entire preallocated buffer every tick and erase
+    the ragged-decode win: threading the cache through ``lax.scan``
+    xs/ys (slice-in/stack-out copies), and ``vmap`` over the slot axis
+    (in_axes=1 inserts full-buffer transposes). The engine-level
+    regression guard is ``benchmarks/rollout_bench.py``'s flatness
+    assertion.
+    """
+    b = buf.shape[1]
+    for bi in range(b):
+        starts = (layer, bi, 0, cursor[bi]) + (0,) * (buf.ndim - 4)
+        buf = jax.lax.dynamic_update_slice(
+            buf, new[bi][None, None], starts)
+    return buf
 
 
 def build_sim_encoding(cfg: AgentSimConfig) -> Optional[GroupEncoding]:
@@ -165,35 +194,68 @@ class SimAttention:
         return self._finish(params, out, pose)
 
     def decode_step(self, params, x, pose, times, segment_ids,
-                    k_cache, v_cache, cache_times, cache_seg, cursor):
+                    kv_cache, layer, cache_times, cache_seg, cursor,
+                    impl=None):
         """Incremental decode: attend ``n`` new tokens over the cache.
 
         x (B, n, d_model); pose (B, n, 3) *encoder-scaled*; times (B, n);
-        segment_ids (B, n); k_cache (B, H, S_max, c); v_cache
-        (B, H, S_max, cv); cache_times / cache_seg (B, S_max) **already
-        updated** with the new tokens' rows (they are layer-independent, so
-        the model writes them once); cursor (B,) — rows written *before*
-        this call. Returns (out (B, n, d_model), k_cache', v_cache').
+        segment_ids (B, n); ``kv_cache`` is the model's layer-STACKED
+        cache: ``{"k": (L, B, H, S_max, c), "v": (L, B, H, S_max, cv)}``
+        plus, for int8 caches, per-(head, token) ``"k_scale"``/
+        ``"v_scale"`` (L, B, H, S_max) float32 living beside the rows
+        they scale; ``layer`` is this layer's static index. The stacked
+        buffers are written with O(n) in-place scatters and read by the
+        ragged decode paths through in-place (layer, block) slices — a
+        per-layer (B, H, S_max, .) copy never exists. cache_times /
+        cache_seg (B, S_max) are **already updated** with the new tokens'
+        rows (they are layer-independent, so the model writes them once);
+        cursor (B,) — rows written *before* this call. Returns
+        (out (B, n, d_model), updated kv_cache).
 
-        New rows are written at [cursor, cursor + n); the query attends the
-        cache with the same block-causal times + segment mask as the full
+        New rows are written at [cursor, cursor + n) — quantized on
+        write for int8 caches (a row's absmax never changes after the
+        write, so per-row scales are exact). The query attends the cache
+        with the same block-causal times + segment mask as the full
         forward, plus cursor masking (``kv_length = cursor + n``) so
         never-written slots are unreachable even where ``cache_seg`` has
-        been scribbled on by a retired scene.
+        been scribbled on by a retired scene. ``impl`` (or
+        ``cfg.decode_impl``, or ``cfg.attn_impl``) picks the
+        ``kops.decode_attention`` backend: the split-K ragged decode
+        kernel / its XLA twin pay O(cursor) per call; the generic-kernel
+        names scan all of S_max and remain the parity oracle.
         """
         cfg = self.cfg
         n = x.shape[1]
         q, k_new, v_new = self._qkv(params, x, pose)
-        k_cache = _scatter_rows(k_cache, k_new.astype(k_cache.dtype), cursor)
-        v_cache = _scatter_rows(v_cache, v_new.astype(v_cache.dtype), cursor)
+        kv_cache = dict(kv_cache)
+        if "k_scale" in kv_cache:
+            k_q, k_s = quantize_kv(k_new)
+            v_q, v_s = quantize_kv(v_new)
+            kv_cache["k"] = _scatter_layer_rows(kv_cache["k"], layer, k_q,
+                                                cursor)
+            kv_cache["v"] = _scatter_layer_rows(kv_cache["v"], layer, v_q,
+                                                cursor)
+            kv_cache["k_scale"] = _scatter_layer_rows(
+                kv_cache["k_scale"], layer, k_s, cursor)
+            kv_cache["v_scale"] = _scatter_layer_rows(
+                kv_cache["v_scale"], layer, v_s, cursor)
+        else:
+            kv_cache["k"] = _scatter_layer_rows(
+                kv_cache["k"], layer,
+                k_new.astype(kv_cache["k"].dtype), cursor)
+            kv_cache["v"] = _scatter_layer_rows(
+                kv_cache["v"], layer,
+                v_new.astype(kv_cache["v"].dtype), cursor)
         scale = 1.0 / float(cfg.head_dim) ** 0.5
-        out = kops.attention(q, k_cache, v_cache, impl=cfg.attn_impl,
-                             scale=scale, causal=True,
-                             q_times=times, k_times=cache_times,
-                             q_segment_ids=segment_ids,
-                             k_segment_ids=cache_seg,
-                             kv_length=cursor + n)
-        return self._finish(params, out, pose), k_cache, v_cache
+        out = kops.decode_attention(
+            q, kv_cache["k"], kv_cache["v"],
+            kv_length=cursor + n, layer=layer,
+            impl=impl or cfg.decode_impl or cfg.attn_impl,
+            scale=scale, q_times=times, k_times=cache_times,
+            q_segment_ids=segment_ids, k_segment_ids=cache_seg,
+            k_scale=kv_cache.get("k_scale"),
+            v_scale=kv_cache.get("v_scale"))
+        return self._finish(params, out, pose), kv_cache
 
 
 class AgentSimModel:
@@ -304,6 +366,9 @@ class AgentSimModel:
     # logits exactly (tests/test_decode.py) at O(T) instead of O(T^2) work
     # per rollout step. See docs/rollout.md for the soundness argument.
 
+    #: layer-stacked cache entries scanned alongside the block params
+    _LAYER_CACHE_KEYS = ("k", "v", "k_scale", "v_scale")
+
     def init_cache(self, batch_size: int, max_len: int, dtype=None):
         """Preallocate the decode cache for ``batch_size`` scene slots.
 
@@ -311,28 +376,42 @@ class AgentSimModel:
         axis (the block parameters are scanned, so the cache scans too),
         plus layer-independent times / segment ids / per-slot cursors.
         Segment ids start at -1, so unwritten rows are always masked.
+
+        ``dtype`` selects the cache storage dtype: a jnp dtype or one of
+        the strings "float32" / "bfloat16" / "int8" (the
+        ``RolloutEngine(cache_dtype=...)`` spelling). int8 caches carry
+        per-(head, token) float32 ``k_scale``/``v_scale`` arrays beside
+        the rows (quantized on write, dequantized inside the decode
+        kernel), shrinking the decode working set ~4x at the cost of one
+        f32 scalar per row.
         """
         cfg = self.cfg
-        if dtype is None:
-            dtype = cfg.compute_dtype
+        dtype = canonical_cache_dtype(dtype, default=cfg.compute_dtype)
         ck, cv = self.attn.cache_dims
         l, b, h, s = cfg.num_layers, batch_size, cfg.num_heads, max_len
-        return {
+        cache = {
             "k": jnp.zeros((l, b, h, s, ck), dtype),
             "v": jnp.zeros((l, b, h, s, cv), dtype),
             "times": jnp.zeros((b, s), jnp.int32),
             "seg": jnp.full((b, s), -1, jnp.int32),
             "cursor": jnp.zeros((b,), jnp.int32),
         }
+        if dtype == jnp.int8:
+            # scale 0 dequantizes unwritten rows to exact zeros (they are
+            # cursor-masked anyway)
+            cache["k_scale"] = jnp.zeros((l, b, h, s), jnp.float32)
+            cache["v_scale"] = jnp.zeros((l, b, h, s), jnp.float32)
+        return cache
 
-    def _extend(self, params, cache, x, pose, times, segment_ids):
+    def _extend(self, params, cache, x, pose, times, segment_ids, impl=None):
         """Feed ``n`` new tokens through every layer against the cache.
 
         x (B, n, d_model) embedded tokens; pose (B, n, 3) raw world poses;
         times/segment_ids (B, n). Returns (logits (B, n, A), new cache).
         Used for both prefill (n = whole history) and rollout steps (n =
         num_agents): the mask semantics are identical, so prefill is just a
-        big first step.
+        big first step. ``impl`` overrides the decode attention backend
+        (see ``SimAttention.decode_step``).
         """
         cfg = self.cfg
         n = x.shape[1]
@@ -341,27 +420,31 @@ class AgentSimModel:
             [cfg.pos_scale, cfg.pos_scale, 1.0], jnp.float32)
         cache_times = _scatter_rows(cache["times"], times, cursor)
         cache_seg = _scatter_rows(cache["seg"], segment_ids, cursor)
+        kv_cache = {k: cache[k] for k in self._LAYER_CACHE_KEYS
+                    if k in cache}
 
-        def body(x, layer):
-            lp, kc, vc = layer
+        # Python loop, NOT lax.scan: the layer index must be static so
+        # the decode kernels can address the stacked cache in place, and
+        # scanning the cache through xs/ys would copy the whole
+        # preallocated buffer every tick (see _scatter_layer_rows).
+        # num_layers is small; the unrolled loop costs only compile time.
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[li], params["blocks"])
             h = self.norm1(lp["norm1"], x)
-            attn_out, kc, vc = self.attn.decode_step(
+            attn_out, kv_cache = self.attn.decode_step(
                 lp["attn"], h, enc_pose, times, segment_ids,
-                kc, vc, cache_times, cache_seg, cursor)
+                kv_cache, li, cache_times, cache_seg, cursor, impl=impl)
             x = x + attn_out
             h = self.norm2(lp["norm2"], x)
             x = x + self.mlp(lp["mlp"], h)
-            return x, (kc, vc)
 
-        x, (new_k, new_v) = jax.lax.scan(
-            body, x, (params["blocks"], cache["k"], cache["v"]))
         x = self.final_norm(params["final_norm"], x)
         logits = self.head(params["head"], x)
-        new_cache = {"k": new_k, "v": new_v, "times": cache_times,
+        new_cache = {**kv_cache, "times": cache_times,
                      "seg": cache_seg, "cursor": cursor + n}
         return logits, new_cache
 
-    def prefill(self, params, cache, batch):
+    def prefill(self, params, cache, batch, impl=None):
         """Write a scene's map + agent history into the cache.
 
         ``batch`` has the ``__call__`` layout with T = history length.
@@ -380,11 +463,11 @@ class AgentSimModel:
         if cfg.encoding == "absolute":
             x = x + self._pose_embedding(params, pose).astype(dt)
         logits, cache = self._extend(params, cache, x, pose, times,
-                                     segment_ids)
+                                     segment_ids, impl=impl)
         return logits[:, m:].reshape(b, t, a, cfg.num_actions), cache
 
     def step(self, params, cache, agent_feats, agent_pose, agent_valid,
-             step_time):
+             step_time, impl=None):
         """Advance every scene slot by one simulation step.
 
         agent_feats (B, A, Fa); agent_pose (B, A, 3); agent_valid (B, A)
@@ -401,7 +484,8 @@ class AgentSimModel:
         times = jnp.broadcast_to((step_time + 1)[:, None], (b, a))
         times = times.astype(jnp.int32)
         segment_ids = jnp.where(agent_valid, 0, -1).astype(jnp.int32)
-        return self._extend(params, cache, x, agent_pose, times, segment_ids)
+        return self._extend(params, cache, x, agent_pose, times, segment_ids,
+                            impl=impl)
 
 
 def action_nll(logits, actions, valid):

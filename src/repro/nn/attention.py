@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from repro.core.encodings import GroupEncoding, Rope1D
 from repro.distributed.sharding import logical_constraint
 from repro.kernels import ops as kops
+from repro.kernels.flash_decode import (canonical_cache_dtype, dequantize_kv,
+                                        quantize_kv)
 from repro.nn.layers import Dense
 from repro.nn.module import ParamSpec
 
@@ -160,10 +162,29 @@ class Attention:
 
         new_cache = None
         if cache is not None:
-            ck, cv = cache["k"], cache["v"]
-            ck = _cache_update(ck, k, cache_index)
-            cv = _cache_update(cv, v, cache_index)
-            new_cache = {"k": ck, "v": cv}
+            if "k_scale" in cache:
+                # int8 cache: quantize the new rows on write (per-row
+                # scales beside the values), dequantize for the XLA
+                # fallback attention below. The cache's HBM footprint is
+                # what shrinks; the rollout-path Pallas decode kernel
+                # (repro.kernels.flash_decode) dequantizes per-tile in
+                # VMEM instead of materializing the cache in f32.
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                ck = _cache_update(cache["k"], kq, cache_index)
+                cv = _cache_update(cache["v"], vq, cache_index)
+                cks = _cache_update(cache["k_scale"][..., None],
+                                    ks[..., None], cache_index)[..., 0]
+                cvs = _cache_update(cache["v_scale"][..., None],
+                                    vs[..., None], cache_index)[..., 0]
+                new_cache = {"k": ck, "v": cv, "k_scale": cks,
+                             "v_scale": cvs}
+                ck = dequantize_kv(ck, cks, dtype=q.dtype)
+                cv = dequantize_kv(cv, cvs, dtype=q.dtype)
+            else:
+                ck = _cache_update(cache["k"], k, cache_index)
+                cv = _cache_update(cache["v"], v, cache_index)
+                new_cache = {"k": ck, "v": cv}
             out = kops.attention(
                 q, ck, cv, impl="chunked" if impl == "flash" else impl,
                 causal=self.causal, window=self.window, softcap=self.softcap,
@@ -182,16 +203,26 @@ class Attention:
         return logical_constraint(y, "act_batch", "act_seq", "act_embed"), new_cache
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """``dtype``: jnp dtype or "float32"/"bfloat16"/"int8". int8
+        caches store per-(head, token) float32 scales beside K/V
+        (quantize-on-write; see ``repro.kernels.flash_decode``)."""
+        dtype = canonical_cache_dtype(dtype, default=jnp.bfloat16)
         hd = self.head_dim
         rd = self._rot_dim
         # cache stores encoded keys; for dim-preserving encodings hd is right
         if self.encoding is not None and self.encoding.transforms_values:
             raise NotImplementedError(
                 "KV cache with value-transforming encodings")
-        return {
+        cache = {
             "k": jnp.zeros((batch, self.num_kv_heads, max_len, hd), dtype),
             "v": jnp.zeros((batch, self.num_kv_heads, max_len, hd), dtype),
         }
+        if dtype == jnp.int8:
+            cache["k_scale"] = jnp.zeros(
+                (batch, self.num_kv_heads, max_len), jnp.float32)
+            cache["v_scale"] = jnp.zeros(
+                (batch, self.num_kv_heads, max_len), jnp.float32)
+        return cache
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,6 +15,7 @@ assignment, chunking, or parallel execution order.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -56,18 +57,38 @@ class RolloutEngine:
 
     def __init__(self, model, params, scen_cfg: ScenarioConfig,
                  *, num_slots: int, max_len: Optional[int] = None,
-                 cache_dtype=None):
+                 cache_dtype=None, decode_impl: Optional[str] = None):
+        """``cache_dtype``: storage dtype of the per-layer K/V cache — a
+        jnp dtype or "float32" / "bfloat16" / "int8" (int8 caches carry
+        per-row scales beside K/V and are dequantized inside the decode
+        kernel; see ``AgentSimModel.init_cache``). ``decode_impl``
+        overrides the model's decode attention backend for this engine
+        ("auto" / "flash_decode" / "xla" / "ref" / "chunked" — see
+        ``repro.kernels.ops.decode_attention``); None keeps the model
+        config's choice.
+        """
         self.model = model
         self.params = params
         self.scen = scen_cfg
         self.num_slots = num_slots
-        self.max_len = max_len or (scen_cfg.num_map
-                                   + scen_cfg.num_steps * scen_cfg.num_agents)
+        max_len = max_len or (scen_cfg.num_map
+                              + scen_cfg.num_steps * scen_cfg.num_agents)
+        # Round up to the decode kernel's key-block size: layer-stacked
+        # caches are consumed in place (padding them per call would copy
+        # the whole buffer every tick); unwritten rows stay cursor-masked.
+        self.max_len = -(-max_len // 128) * 128 if max_len > 128 else max_len
         self.cache_dtype = cache_dtype
+        self.decode_impl = decode_impl
         self._accel = jnp.asarray(scen_cfg.accel_values(), jnp.float32)
         self._yaw = jnp.asarray(scen_cfg.yaw_values(), jnp.float32)
-        self._prefill = jax.jit(model.prefill)
-        self._step = jax.jit(self._step_impl)
+        # Donate the cache so XLA updates it in place: without donation
+        # every tick round-trips the full preallocated K/V cache through
+        # a copy, which dwarfs the attention work the decode kernel
+        # saves (the cache is tens of MiB per slot batch).
+        self._prefill = jax.jit(
+            functools.partial(model.prefill, impl=decode_impl),
+            donate_argnums=(1,))
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
         self.ticks = 0
 
     def init_cache(self):
@@ -97,7 +118,7 @@ class RolloutEngine:
         feats = feats_proto.at[..., 0].set(speed / 10.0)
         t_vec = jnp.broadcast_to(t, (b,)).astype(jnp.int32)
         logits, cache = self.model.step(params, cache, feats, pose, valid,
-                                        t_vec)
+                                        t_vec, impl=self.decode_impl)
         return cache, logits, pose, speed, acts
 
     def _run_chunk(self, hist_batch: Dict[str, jnp.ndarray], keys,

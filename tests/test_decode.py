@@ -1,15 +1,27 @@
 """Incremental-decode parity: cached rollout equals the full forward.
 
-Two levels:
+Three levels:
 
   * ops-level — the ``kv_length`` cursor-masked decode path of
     ``repro.kernels.ops.attention`` reproduces the matching rows of the
     full-sequence forward across the feature matrix {causal positions,
     block-causal times, segment ids, GQA} and every impl (ref / chunked /
     flash-in-interpret-mode).
+  * decode-kernel — the split-K ragged decode paths
+    (``ops.decode_attention``: the Pallas kernel in interpret mode, its
+    cursor-bounded XLA twin, and the generic-kernel fallback) agree with
+    the O(S^2) oracle across cursors {0, 1, block-1, block, full, ragged
+    per-row}, GQA, segments, times, split counts, and cache dtypes
+    f32 / bf16 / int8-with-scales. The f32/bf16/int8 *parity* tolerances
+    are tight (all paths consume identical cache values; only summation
+    order differs); the int8 *quantization drift* against an unquantized
+    cache is asserted separately at its documented ~1% level.
   * model-level — ``AgentSimModel.prefill`` + repeated ``step`` over the
     per-layer transformed-K/V cache reproduces ``__call__``'s logits for
-    all four Table-I encodings, in f32 (tight tol) and bf16 (loose tol).
+    all four Table-I encodings, in f32 (tight tol), bf16 (loose tol),
+    and with an int8-quantized cache (documented quantization tol) under
+    every decode impl; and int8-cache closed-loop rollout metrics match
+    the f32 cache within documented tolerance.
     This is the soundness proof of SE(2)-invariant K/V caching: cached
     ``phi_k``-transformed rows are never re-projected (docs/rollout.md).
 """
@@ -20,6 +32,7 @@ import pytest
 
 from repro.data import scenarios
 from repro.kernels import ops, ref
+from repro.kernels.flash_decode import dequantize_kv, quantize_kv
 from repro.nn import module as nnm
 from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
 
@@ -123,6 +136,139 @@ def test_ops_decode_q_offset_equivalence():
                         kv_length=jnp.asarray([64], jnp.int32))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode kernel: split-K ragged decode vs the O(S^2) oracle
+# ---------------------------------------------------------------------------
+
+DECODE_BLOCK = 16          # kernel key-block size used by the parity matrix
+
+DECODE_FEATS = {
+    "plain": dict(times=False, segments=False, hkv="mha"),
+    "times": dict(times=True, segments=False, hkv="mha"),
+    "seg_times": dict(times=True, segments=True, hkv="mha"),
+    "gqa": dict(times=False, segments=False, hkv="gqa"),
+    "gqa_seg_times": dict(times=True, segments=True, hkv="gqa"),
+}
+
+# cursor cases from the issue: zero, one, block-1, block, full, and a
+# ragged per-row vector straddling a block boundary
+DECODE_CURSORS = {
+    "zero": lambda b, s: np.zeros(b, np.int32),
+    "one": lambda b, s: np.ones(b, np.int32),
+    "block_minus_1": lambda b, s: np.full(b, DECODE_BLOCK - 1, np.int32),
+    "block": lambda b, s: np.full(b, DECODE_BLOCK, np.int32),
+    "full": lambda b, s: np.full(b, s, np.int32),
+    "ragged": lambda b, s: np.asarray(
+        [s - 7, DECODE_BLOCK + 1][:b] * (b // 2 + 1), np.int32)[:b],
+}
+
+#: parity tolerance per cache dtype. Every impl consumes the *same*
+#: cache values (bf16 rows / int8 rows + scales are dequantized to
+#: identical f32 on all paths), so f32 / int8 stay at f32-summation-
+#: order tightness. bf16 is looser for one reason only: the generic
+#: fallback rounds its *output* to the cache dtype (``mha_reference``
+#: returns v.dtype) while the decode kernels emit q.dtype f32 — one
+#: bf16 output rounding, <= 2^-8 relative. The quantization error
+#: itself is asserted separately (test_flash_decode_int8_drift).
+DECODE_TOL = {"float32": dict(atol=2e-5, rtol=2e-4),
+              "bfloat16": dict(atol=8e-3, rtol=8e-3),
+              "int8": dict(atol=2e-4, rtol=2e-3)}
+
+
+def _decode_case(feat, cache_dtype, seed):
+    rng = np.random.default_rng(seed)
+    b, s, sq, d = 2, 48, 4, 12
+    hq, hkv = (4, 2) if DECODE_FEATS[feat]["hkv"] == "gqa" else (2, 2)
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    kw = {}
+    if DECODE_FEATS[feat]["times"]:
+        kt = jnp.asarray(np.sort(rng.integers(0, 6, size=(b, s)), -1),
+                         jnp.int32)
+        kw["q_times"] = jnp.full((b, sq), 6, jnp.int32)  # appended last
+        kw["k_times"] = kt
+    if DECODE_FEATS[feat]["segments"]:
+        kw["q_segment_ids"] = jnp.asarray(
+            rng.integers(0, 2, size=(b, sq)), jnp.int32)
+        kw["k_segment_ids"] = jnp.asarray(
+            rng.integers(0, 2, size=(b, s)), jnp.int32)
+    k_scale = v_scale = None
+    if cache_dtype == "int8":
+        k, k_scale = quantize_kv(k)
+        v, v_scale = quantize_kv(v)
+        k_oracle = dequantize_kv(k, k_scale)
+        v_oracle = dequantize_kv(v, v_scale)
+    elif cache_dtype == "bfloat16":
+        k = k.astype(jnp.bfloat16)
+        v = v.astype(jnp.bfloat16)
+        k_oracle, v_oracle = k.astype(jnp.float32), v.astype(jnp.float32)
+    else:
+        k_oracle, v_oracle = k, v
+    return q, k, v, k_scale, v_scale, k_oracle, v_oracle, kw
+
+
+@pytest.mark.parametrize("cache_dtype", sorted(DECODE_TOL))
+@pytest.mark.parametrize("feat", sorted(DECODE_FEATS))
+@pytest.mark.parametrize("cursor", sorted(DECODE_CURSORS))
+def test_decode_kernel_parity_matrix(cursor, feat, cache_dtype):
+    """flash_decode (interpret) == ragged XLA == generic fallback ==
+    O(S^2) oracle, across the cursor x feature x cache-dtype matrix."""
+    seed = (sorted(DECODE_CURSORS).index(cursor) * 31
+            + sorted(DECODE_FEATS).index(feat))
+    q, k, v, k_scale, v_scale, k_oracle, v_oracle, kw = _decode_case(
+        feat, cache_dtype, seed)
+    b, s = k.shape[0], k.shape[2]
+    kvl = jnp.asarray(DECODE_CURSORS[cursor](b, s))
+    want = np.asarray(ref.mha_reference(
+        q, k_oracle, v_oracle, causal="q_times" in kw,
+        kv_length=kvl, **kw), np.float32)
+
+    common = dict(kv_length=kvl, k_scale=k_scale, v_scale=v_scale, **kw)
+    got = {
+        "flash_decode": ops.decode_attention(
+            q, k, v, impl="flash_decode", block_k=DECODE_BLOCK,
+            num_splits=2, interpret=True, **common),
+        "xla": ops.decode_attention(q, k, v, impl="xla",
+                                    block_k=DECODE_BLOCK, **common),
+        "ref": ops.decode_attention(q, k, v, impl="ref", **common),
+    }
+    for name, g in got.items():
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), want, **DECODE_TOL[cache_dtype],
+            err_msg=f"{name} {cursor}/{feat}/{cache_dtype}")
+
+
+@pytest.mark.parametrize("num_splits", [1, 2, 3, 5])
+def test_flash_decode_split_counts(num_splits):
+    """The split-K reduction is invariant to the split count (including
+    counts that do not divide the block count, and a single split)."""
+    q, k, v, _, _, _, _, kw = _decode_case("gqa_seg_times", "float32", 7)
+    kvl = jnp.asarray([41, 17], jnp.int32)
+    want = ops.decode_attention(q, k, v, impl="ref", kv_length=kvl, **kw)
+    got = ops.decode_attention(q, k, v, impl="flash_decode", kv_length=kvl,
+                               block_k=8, num_splits=num_splits,
+                               interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_flash_decode_int8_drift():
+    """int8 cache vs unquantized f32 cache: the documented quantization
+    error budget. Per-row symmetric int8 rounds each K/V entry within
+    absmax/254 (~0.4% of the row scale); through the softmax that stays
+    well under 5e-2 absolute on O(1)-magnitude attention outputs."""
+    q, k, v, _, _, _, _, kw = _decode_case("seg_times", "float32", 11)
+    kvl = jnp.asarray([48, 33], jnp.int32)
+    want = ops.decode_attention(q, k, v, impl="xla", kv_length=kvl, **kw)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    got = ops.decode_attention(q, kq, vq, impl="xla", kv_length=kvl,
+                               k_scale=ks, v_scale=vs, **kw)
+    drift = float(jnp.max(jnp.abs(got - want)))
+    assert 0 < drift < 5e-2, drift
 
 
 # ---------------------------------------------------------------------------
@@ -273,3 +419,162 @@ def test_per_slot_cursor_decode():
     np.testing.assert_allclose(np.asarray(lt[1], np.float32),
                                np.asarray(full[1, 2], np.float32),
                                atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# model-level: quantized caches and the ragged decode impls
+# ---------------------------------------------------------------------------
+
+#: model-level tolerance for an int8 K/V cache vs the unquantized full
+#: forward. The cached phi_k-transformed rows are quantized per (head,
+#: token) to int8 (round-off <= absmax/254 per row); at the tiny test
+#: scale that perturbs action logits by ~2e-2, so 8e-2 gives 4x headroom
+#: while still catching a mis-scaled row outright (which shifts logits
+#: by O(1)).
+INT8_MODEL_TOL = dict(atol=8e-2, rtol=8e-2)
+
+
+@pytest.mark.parametrize("impl", ["ref", "xla", "flash_decode"])
+@pytest.mark.parametrize("encoding", ["se2_fourier", "absolute"])
+def test_cached_decode_int8_cache(encoding, impl):
+    """prefill + step over an int8-quantized cache tracks the unquantized
+    full forward within the documented tolerance — identically under the
+    oracle fallback, the ragged XLA path, and the Pallas split-K kernel
+    (interpret mode): every new flag combination keeps ref as oracle."""
+    cfg, model, params = _tiny_model(encoding)
+    batch = _batch()
+    full, _ = model(params, batch)
+    b = batch["map_feats"].shape[0]
+    max_len = SCEN.num_map + SCEN.num_steps * SCEN.num_agents
+    cache = model.init_cache(b, max_len, dtype="int8")
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+
+    t_hist = 2
+    hist = dict(batch)
+    for key in ("agent_feats", "agent_pose", "agent_valid"):
+        hist[key] = batch[key][:, :t_hist]
+    got, cache = model.prefill(params, cache, hist, impl=impl)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full[:, :t_hist], np.float32),
+                               err_msg=f"{encoding}/{impl} prefill",
+                               **INT8_MODEL_TOL)
+    for t in range(t_hist, SCEN.num_steps):
+        lt, cache = model.step(params, cache, batch["agent_feats"][:, t],
+                               batch["agent_pose"][:, t],
+                               batch["agent_valid"][:, t],
+                               jnp.full((b,), t, jnp.int32), impl=impl)
+        np.testing.assert_allclose(np.asarray(lt, np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   err_msg=f"{encoding}/{impl} step {t}",
+                                   **INT8_MODEL_TOL)
+
+
+@pytest.mark.parametrize("encoding", ["se2_fourier", "rope2d"])
+def test_cached_decode_ragged_impls_match_oracle_exactly(encoding):
+    """With an f32 cache the ragged decode impls must match the oracle
+    ("ref") decode path to f32-roundoff on the logits: same mask, same
+    cache rows, only the online-softmax evaluation order differs."""
+    cfg, model, params = _tiny_model(encoding)
+    batch = _batch(with_invalid=True)
+    b = batch["map_feats"].shape[0]
+    max_len = SCEN.num_map + SCEN.num_steps * SCEN.num_agents
+
+    def roll(impl):
+        cache = model.init_cache(b, max_len)
+        hist = dict(batch)
+        for key in ("agent_feats", "agent_pose", "agent_valid"):
+            hist[key] = batch[key][:, :1]
+        logits, cache = model.prefill(params, cache, hist, impl=impl)
+        outs = [logits]
+        for t in range(1, SCEN.num_steps):
+            lt, cache = model.step(params, cache,
+                                   batch["agent_feats"][:, t],
+                                   batch["agent_pose"][:, t],
+                                   batch["agent_valid"][:, t],
+                                   jnp.full((b,), t, jnp.int32), impl=impl)
+            outs.append(lt)
+        return np.concatenate([np.asarray(o, np.float32).reshape(b, -1)
+                               for o in outs], axis=1)
+
+    want = roll("ref")
+    # invalid-agent rows are compared too: every impl forces fully-masked
+    # attention rows to zero, so their logits are well-defined and equal
+    for impl in ("xla", "flash_decode"):
+        got = roll(impl)
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-3,
+                                   err_msg=impl)
+
+
+def test_lm_attention_int8_cache_decode():
+    """The generic LM ``Attention`` cache also supports int8 storage
+    (quantize-on-write, scales beside K/V): greedy decode logits over an
+    int8 cache track the f32 cache within the quantization tolerance."""
+    from repro.nn.attention import Attention
+
+    attn = Attention(d_model=32, num_q_heads=4, num_kv_heads=2, head_dim=8,
+                     causal=True)
+    params = nnm.init_params(attn.specs(), jax.random.key(3))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 6, 32)), jnp.float32)
+    pose = jnp.broadcast_to(jnp.arange(6, dtype=jnp.float32), (2, 6))
+
+    outs = {}
+    for dtype in ("float32", "int8"):
+        cache = attn.init_cache(2, 8, dtype=dtype)
+        assert ("k_scale" in cache) == (dtype == "int8")
+        step_outs = []
+        for t in range(6):
+            y, cache = attn(params, x[:, t:t + 1], pose[:, t:t + 1],
+                            cache=cache, cache_index=t)
+            step_outs.append(np.asarray(y, np.float32))
+        outs[dtype] = np.concatenate(step_outs, axis=1)
+    np.testing.assert_allclose(outs["int8"], outs["float32"],
+                               atol=8e-2, rtol=8e-2)
+    assert np.abs(outs["int8"] - outs["float32"]).max() > 0, \
+        "int8 cache produced bit-identical outputs — quantization inert?"
+
+
+def test_int8_cache_rollout_metrics_match_f32():
+    """Closed-loop acceptance: int8-cache rollout metrics (minADE / miss
+    / collision) match the f32 cache within documented tolerance.
+
+    Same engine, same per-(scene, sample) key stream; the int8 cache
+    perturbs logits by ~1e-2, which can flip an occasional categorical
+    draw — so trajectories may diverge on a few (scene, sample, step)
+    triples while the *metrics* stay close. Tolerances: minADE within
+    25% relative (or 0.5 m absolute); miss/collision rates within 0.25
+    absolute. The run is deterministic, so this is a regression pin, not
+    a flaky statistical test.
+    """
+    from repro.runtime.evaluation import EvalConfig, scene_metrics
+    from repro.runtime.rollout import RolloutEngine
+    from repro.scenarios import registry
+
+    scen = scenarios.ScenarioConfig(num_map=8, num_agents=4, num_steps=16)
+    cfg = AgentSimConfig(d_model=32, num_layers=2, num_heads=2, head_dim=12,
+                         d_ff=64, num_actions=scen.num_actions,
+                         encoding="se2_fourier", fourier_terms=8,
+                         attn_impl="ref")
+    model = AgentSimModel(cfg)
+    params = nnm.init_params(model.specs(), jax.random.key(0))
+    scenes = [registry.generate_scene("highway", 123, i, scen)
+              for i in range(2)]
+    eval_cfg = EvalConfig(t_hist=4, n_samples=2, seed=0)
+
+    def metrics(cache_dtype):
+        eng = RolloutEngine(model, params, scen, num_slots=4,
+                            cache_dtype=cache_dtype, decode_impl="xla")
+        futures = eng.run([s.tensors for s in scenes],
+                          t_hist=eval_cfg.t_hist,
+                          n_samples=eval_cfg.n_samples, seed=eval_cfg.seed)
+        rows = [scene_metrics(scen, eval_cfg, s, futures[i])
+                for i, s in enumerate(scenes)]
+        return {m: float(np.nanmean([r[m] for r in rows]))
+                for m in ("min_ade", "miss_rate", "collision_rate")}
+
+    m32 = metrics(None)
+    m8 = metrics("int8")
+    assert abs(m8["min_ade"] - m32["min_ade"]) <= \
+        max(0.5, 0.25 * m32["min_ade"]), (m32, m8)
+    for key in ("miss_rate", "collision_rate"):
+        assert abs(m8[key] - m32[key]) <= 0.25, (key, m32, m8)
