@@ -12,6 +12,10 @@ Prints ``name,value,notes`` CSV rows. Modules:
   rollout_bench      — cached-decode throughput: ragged decode kernel vs
                        generic full-cache scan, cache-dtype sweep,
                        flat-in-max_len regression -> BENCH_rollout.json
+  serve_bench        — continuous-batching SimServer under Poisson
+                       arrivals: scenes/s + p50/p99 tick latency per
+                       slot count, slab accounting, parity vs batch
+                       eval -> BENCH_serve.json
   adaptive_basis     — beyond-paper: scale-adaptive basis truncation
   kernel_bench       — kernel micro-times + Pallas/oracle parity
                        (fwd, bwd, and ragged-decode modes)
@@ -91,11 +95,13 @@ def main() -> None:
     ap.add_argument("--train-bench-steps", type=int, default=80)
     ap.add_argument("--rollout-smoke", action="store_true",
                     help="run rollout_bench at CI (smoke) size")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="run serve_bench at CI (smoke) size")
     args = ap.parse_args()
 
     from benchmarks import (adaptive_basis, agent_sim_table1, approx_error,
                             attention_scaling, kernel_bench, rollout_bench,
-                            scenario_eval, train_bench)
+                            scenario_eval, serve_bench, train_bench)
 
     def run_rollout(report):
         if args.rollout_smoke:
@@ -109,6 +115,16 @@ def main() -> None:
         return rollout_bench.run(report, reps=2, min_speedup=2.0,
                                  max_flat_dev=0.2)
 
+    def run_serve(report):
+        if args.serve_smoke:
+            # smoke numbers go to /tmp so they never clobber the
+            # committed full-size BENCH_serve.json record
+            return serve_bench.run(report, slot_counts=(2, 4), n_scenes=8,
+                                   num_map=8, num_agents=4, num_steps=12,
+                                   rate=1.0, smoke=True,
+                                   out="/tmp/BENCH_serve_smoke.json")
+        return serve_bench.run(report)
+
     benches = {
         "approx_error": lambda r: approx_error.run(r),
         "attention_scaling": lambda r: attention_scaling.run(r),
@@ -121,6 +137,7 @@ def main() -> None:
         "train_bench": lambda r: train_bench.run(
             r, steps=args.train_bench_steps),
         "rollout_bench": run_rollout,
+        "serve_bench": run_serve,
         "roofline_summary": lambda r: roofline_summary(r),
     }
     only = set(args.only.split(",")) if args.only else set(benches)

@@ -1,0 +1,165 @@
+"""Continuous-batching sim-serving throughput under Poisson arrivals.
+
+Drives a :class:`repro.runtime.SimServer` with an open-loop Poisson
+arrival stream (the traffic model serving systems are sized against — a
+"heavy traffic from millions of users" proxy at bench scale) and
+records, per slot count:
+
+  * **sustained scenes/s** — drained scenes over post-compile wall time,
+    admissions interleaving with mid-flight scenes the whole way;
+  * **p50/p99 tick latency** — per-``tick()`` wall time (device dispatch
+    + the pipelined drain of tick t-``drain_lag``'s outputs);
+  * **slab accounting** — one shared ``(L, slots, H, slab, ·)`` cache,
+    MiB and peak row occupancy, vs the sum of per-scene caches a
+    no-slab design would allocate.
+
+Every lane is keyed exactly like ``RolloutEngine.run`` lane (i, 0), so
+the bench double-checks the isolation contract for free: per-scene
+futures under Poisson churn must bit-match the engine's batch eval
+(asserted in --smoke, where CI runs it; recorded always).
+
+Writes ``BENCH_serve.json`` (repo root; --smoke writes to /tmp so CI
+never clobbers the committed record).
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.rollout_bench import build
+from repro.runtime.rollout import RolloutEngine
+from repro.runtime.sim_server import SceneRequest, SimServer, poisson_drive
+from repro.scenarios import ScenarioConfig
+from repro.scenarios.registry import generate_mixed
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "..", "BENCH_serve.json")
+WARM_TICKS = 2        # first ticks carry the tick + admit compilations
+
+
+def _drive_one(model, params, scen, scenes, *, num_slots, rate, t_hist,
+               cache_dtype, seed):
+    srv = SimServer(model, params, scen, num_slots=num_slots,
+                    cache_dtype=cache_dtype)
+    reqs = [SceneRequest(uid=i, tensors=s, t_hist=t_hist, seed=seed,
+                        scene_id=i) for i, s in enumerate(scenes)]
+    t0 = time.perf_counter()
+    drive = poisson_drive(srv, reqs, rate=rate, seed=seed)
+    wall_total = time.perf_counter() - t0
+    lat = np.asarray(drive["latencies_s"])
+    assert len(srv.done) == len(scenes), "requests lost under churn"
+    stats = srv.stats()
+    assert stats["tick_compilations"] == 1, "tick recompiled"
+    assert stats["admit_compilations"] == 1, "admission recompiled"
+    warm = lat[WARM_TICKS:] if len(lat) > WARM_TICKS else lat
+    return srv, {
+        "num_slots": num_slots,
+        "rate_per_tick": rate,
+        "ticks": int(stats["ticks"]),
+        "wall_s": wall_total,
+        "scenes_per_s": len(scenes) / max(float(warm.sum()), 1e-9),
+        "tick_p50_ms": 1e3 * float(np.percentile(warm, 50)),
+        "tick_p99_ms": 1e3 * float(np.percentile(warm, 99)),
+        "slab_mib": stats["slab_mib"],
+        "slab_rows": int(stats["slab_rows"]),
+    }
+
+
+def run(report, *, slot_counts=(4, 8), n_scenes=16, num_map=16,
+        num_agents=8, num_steps=32, rate=1.0, encoding="se2_fourier",
+        cache_dtype=None, seed=0, smoke=False, out=None):
+    scen = ScenarioConfig(num_map=num_map, num_agents=num_agents,
+                          num_steps=num_steps)
+    _, model, params = build(scen, encoding=encoding)
+    scenes = generate_mixed(seed, 0, n_scenes, scen)
+    t_hist = max(1, num_steps // 8)
+    rec = {"encoding": encoding, "n_scenes": n_scenes, "num_map": num_map,
+           "num_agents": num_agents, "num_steps": num_steps,
+           "t_hist": t_hist, "rate_per_tick": rate,
+           "cache_dtype": str(cache_dtype), "backend": jax.default_backend(),
+           "slot_counts": {}}
+
+    # batch-eval reference: the same lanes, keyed identically, run
+    # start-to-finish in lockstep by the engine
+    eng = RolloutEngine(model, params, scen, num_slots=min(slot_counts),
+                        cache_dtype=cache_dtype)
+    ref = eng.run(scenes, t_hist=t_hist, n_samples=1, seed=seed)
+
+    for ns in slot_counts:
+        srv, row = _drive_one(model, params, scen, scenes, num_slots=ns,
+                              rate=rate, t_hist=t_hist,
+                              cache_dtype=cache_dtype, seed=seed)
+        got = np.stack([srv.done[i].future for i in range(n_scenes)])
+        parity = bool(np.array_equal(got, ref[:, 0]))
+        row["parity_vs_batch_eval"] = parity
+        # what the slab saves: a no-slab design allocates one full-length
+        # cache per admitted scene instead of num_slots resident ones
+        row["no_slab_mib"] = row["slab_mib"] / ns * n_scenes
+        rec["slot_counts"][ns] = row
+        report(f"serve/{encoding}/slots{ns}/scenes_per_s",
+               f"{row['scenes_per_s']:.2f}",
+               f"poisson rate={rate}/tick, {n_scenes} scenes")
+        report(f"serve/{encoding}/slots{ns}/tick_p50_ms",
+               f"{row['tick_p50_ms']:.2f}")
+        report(f"serve/{encoding}/slots{ns}/tick_p99_ms",
+               f"{row['tick_p99_ms']:.2f}", "post-compile ticks")
+        report(f"serve/{encoding}/slots{ns}/slab_mib",
+               f"{row['slab_mib']:.1f}",
+               f"vs {row['no_slab_mib']:.1f} MiB unshared")
+        report(f"serve/{encoding}/slots{ns}/parity_vs_batch_eval",
+               int(parity), "per-scene futures bit-match RolloutEngine")
+        if smoke:
+            assert row["scenes_per_s"] > 0, "no sustained throughput"
+            assert np.isfinite(row["tick_p99_ms"]), "p99 not finite"
+            assert parity, (
+                f"slots={ns}: served futures diverged from batch eval — "
+                "slot isolation broke under Poisson churn")
+
+    out_path = os.path.abspath(out or DEFAULT_OUT)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    report(f"serve/{encoding}/out", out_path)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny scenes, keeps all assertions")
+    ap.add_argument("--slots", type=int, nargs="+", default=[4, 8])
+    ap.add_argument("--scenes", type=int, default=16)
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--map", type=int, dest="num_map", default=16)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="mean Poisson arrivals per service tick")
+    ap.add_argument("--encoding", default="se2_fourier")
+    ap.add_argument("--cache-dtype", default=None)
+    ap.add_argument("--out", default=None,
+                    help=f"JSON output path (default {DEFAULT_OUT})")
+    args = ap.parse_args()
+    report = lambda name, val, extra="": print(f"{name},{val},{extra}",
+                                               flush=True)
+    if args.smoke:
+        # small enough for CI, big enough that scenes outnumber slots and
+        # every slot recycles; smoke records go to /tmp so they never
+        # clobber the committed BENCH_serve.json perf-trajectory record
+        run(report, slot_counts=(2, 4), n_scenes=8, num_map=8,
+            num_agents=4, num_steps=12, rate=1.0, smoke=True,
+            out=args.out or "/tmp/BENCH_serve_smoke.json")
+    else:
+        run(report, slot_counts=tuple(args.slots), n_scenes=args.scenes,
+            num_map=args.num_map, num_agents=args.agents,
+            num_steps=args.steps, rate=args.rate, encoding=args.encoding,
+            cache_dtype=args.cache_dtype, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

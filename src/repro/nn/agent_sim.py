@@ -103,6 +103,39 @@ def _scatter_layer_rows(buf, layer, new, cursor):
     return buf
 
 
+def install_slot_rows(cache, sub, si, n_rows: int):
+    """Install the first ``n_rows`` rows of a freshly written 1-slot cache
+    ``sub`` into slot ``si`` of a multi-slot cache (continuous-batching
+    admission: a retiring scene's slot is reused by the next scene).
+
+    ``si`` may be a traced scalar, so one compilation serves every slot.
+    This deliberately rewrites ONLY rows ``[0, n_rows)`` plus the slot's
+    cursor: rows at and beyond the (reset) cursor keep whatever the
+    evicted scene left behind — including segment ids claiming validity.
+    They are unreachable anyway, because every decode masks keys at
+    positions >= ``kv_length = cursor + n`` and the cursor only ever
+    advances over freshly written rows (the isolation contract pinned by
+    ``tests/test_sim_server.py``). Scrubbing them would cost an
+    O(max_len) write per admission just to hide from that contract.
+    """
+    out = dict(cache)
+    for key in ("k", "v"):
+        rows = jax.lax.slice_in_dim(sub[key], 0, n_rows, axis=3)
+        out[key] = jax.lax.dynamic_update_slice(
+            cache[key], rows, (0, si, 0, 0, 0))
+    for key in ("k_scale", "v_scale"):
+        if key in cache:
+            rows = jax.lax.slice_in_dim(sub[key], 0, n_rows, axis=3)
+            out[key] = jax.lax.dynamic_update_slice(
+                cache[key], rows, (0, si, 0, 0))
+    for key in ("times", "seg"):
+        out[key] = jax.lax.dynamic_update_slice(
+            cache[key], sub[key][:, :n_rows], (si, 0))
+    out["cursor"] = jax.lax.dynamic_update_slice(
+        cache["cursor"], sub["cursor"], (si,))
+    return out
+
+
 def build_sim_encoding(cfg: AgentSimConfig) -> Optional[GroupEncoding]:
     if cfg.encoding == "absolute":
         return None
@@ -465,6 +498,30 @@ class AgentSimModel:
         logits, cache = self._extend(params, cache, x, pose, times,
                                      segment_ids, impl=impl)
         return logits[:, m:].reshape(b, t, a, cfg.num_actions), cache
+
+    def admit_map(self, params, cache, map_feats, map_pose, map_valid,
+                  impl=None):
+        """Write ONLY a scene's map tokens into the cache.
+
+        The continuous-batching admission primitive: map tokens are the
+        one token block whose width (M) differs from the per-tick A agent
+        tokens, so a sim server admits a scene by extending its slot with
+        the map here and then streaming history steps through the shared
+        tick (``step`` with teacher-forced inputs) — prefill becomes
+        incremental, exactly like the LM server's token-by-token prompt
+        prefill. map_feats (B, M, Fm); map_pose (B, M, 3); map_valid
+        (B, M) bool. Returns (map-token logits — meaningless, discarded
+        by callers — and the updated cache)."""
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        b, m, _ = map_feats.shape
+        x = self.map_enc(params["map_enc"], map_feats.astype(dt))
+        if cfg.encoding == "absolute":
+            x = x + self._pose_embedding(params, map_pose).astype(dt)
+        times = jnp.zeros((b, m), jnp.int32)
+        seg = jnp.where(map_valid, 0, -1).astype(jnp.int32)
+        return self._extend(params, cache, x, map_pose, times, seg,
+                            impl=impl)
 
     def step(self, params, cache, agent_feats, agent_pose, agent_valid,
              step_time, impl=None):

@@ -4,10 +4,13 @@ from repro.runtime import steps
 from repro.runtime.evaluation import (EvalConfig, evaluate_families,
                                       evaluate_scenes)
 from repro.runtime.rollout import RolloutEngine, rollout_keys
+from repro.runtime.sim_server import (SceneRequest, SimResult, SimServer,
+                                      serve_scenes)
 from repro.runtime.steps import (input_specs, lm_loss, make_prefill_step,
                                  make_serve_step, make_train_step)
 
 __all__ = ["steps", "input_specs", "lm_loss", "make_prefill_step",
            "make_serve_step", "make_train_step", "RolloutEngine",
            "rollout_keys", "EvalConfig", "evaluate_families",
-           "evaluate_scenes"]
+           "evaluate_scenes", "SceneRequest", "SimResult", "SimServer",
+           "serve_scenes"]

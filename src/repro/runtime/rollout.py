@@ -90,6 +90,7 @@ class RolloutEngine:
             donate_argnums=(1,))
         self._step = jax.jit(self._step_impl, donate_argnums=(1,))
         self.ticks = 0
+        self.last_actions = None      # (S, K, T_fut, A) after each run()
 
     def init_cache(self):
         return self.model.init_cache(self.num_slots, self.max_len,
@@ -141,14 +142,16 @@ class RolloutEngine:
         # agents valid at the last history step stay the slot's live set
         # for the whole future (families keep validity constant in time)
         valid = hist_batch["agent_valid"][:, -1]
-        out = []
+        out, out_acts = [], []
         for t in range(t_hist, t_total):
-            cache, logits, pose, speed, _ = self._step(
+            cache, logits, pose, speed, acts = self._step(
                 self.params, cache, logits, pose, speed, feats_proto,
                 valid, keys, jnp.asarray(t, jnp.int32))
             self.ticks += 1
             out.append(pose)
-        return jnp.stack(out, axis=1)                      # (B, T_fut, A, 3)
+            out_acts.append(acts)
+        # (B, T_fut, A, 3), (B, T_fut, A)
+        return jnp.stack(out, axis=1), jnp.stack(out_acts, axis=1)
 
     def run(self, scenes: Sequence[Dict[str, np.ndarray]], *, t_hist: int,
             n_samples: int, seed: int = 0, t_total: Optional[int] = None):
@@ -156,7 +159,10 @@ class RolloutEngine:
 
         ``scenes``: scene tensor dicts (any registered family's layout) or
         ``repro.scenarios.Scene`` objects. Returns sampled future poses,
-        shape (n_scenes, n_samples, t_total - t_hist, A, 3), as numpy.
+        shape (n_scenes, n_samples, t_total - t_hist, A, 3), as numpy;
+        the matching sampled action ids land in ``self.last_actions``,
+        shape (n_scenes, n_samples, t_total - t_hist, A) — the isolation
+        suite compares them bit-for-bit against the sim server's.
         """
         scenes = [s.tensors if hasattr(s, "tensors") else s for s in scenes]
         t_total = t_total or self.scen.num_steps
@@ -174,16 +180,19 @@ class RolloutEngine:
                 "agent_valid": s["agent_valid"][:t_hist],
             }
 
-        futures = []
+        futures, actions = [], []
         for start in range(0, total, self.num_slots):
             lanes = [min(start + i, total - 1)
                      for i in range(self.num_slots)]  # pad tail by repeating
             hist = {k: jnp.asarray(np.stack([lane_hist(i)[k] for i in lanes]))
                     for k in lane_hist(0)}
             keys = keys_all[jnp.asarray(lanes)]
-            fut = self._run_chunk(hist, keys, t_hist, t_total)
+            fut, acts = self._run_chunk(hist, keys, t_hist, t_total)
             futures.append(np.asarray(fut[:total - start]))
+            actions.append(np.asarray(acts[:total - start]))
         flat = np.concatenate(futures, axis=0)[:total]
         t_fut = t_total - t_hist
         a = self.scen.num_agents
+        self.last_actions = np.concatenate(actions, axis=0)[:total] \
+            .reshape(n_scenes, n_samples, t_fut, a)
         return flat.reshape(n_scenes, n_samples, t_fut, a, 3)

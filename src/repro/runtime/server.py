@@ -49,14 +49,19 @@ class _Slot:
 
 class Server:
     def __init__(self, model, params, *, num_slots: int, max_len: int,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 cache_dtype=jnp.float32):
+        """``cache_dtype``: K/V cache storage dtype — a jnp dtype or
+        "float32" / "bfloat16" / "int8" (int8 carries per-row scales and
+        dequantizes inside the decode kernel, see ``Attention.init_cache``).
+        """
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.rng = np.random.default_rng(seed)
-        self.cache = model.init_cache(num_slots, max_len, jnp.float32)
+        self.cache = model.init_cache(num_slots, max_len, cache_dtype)
         self.slots = [_Slot() for _ in range(num_slots)]
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}

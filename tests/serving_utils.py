@@ -1,0 +1,69 @@
+"""Shared helpers for the slot-isolation suites (LM Server + SimServer).
+
+Both serving loops make the same promise: a slot is recycled by resetting
+its cursor, the predecessor's rows are left in place, and every decode
+masks key positions >= kv_length — so stale rows are *unreachable*, not
+merely unlikely to matter. ``scribble_stale_rows`` weaponizes that
+promise: it overwrites every row at or beyond each slot's cursor with
+adversarial garbage (huge K/V values, int8 extremes, "valid"-looking
+integer metadata such as segment ids), and the tests then require
+bit-identical outputs. If any masked row ever leaks into attention, the
+garbage makes it loud.
+"""
+import jax
+import numpy as np
+
+
+def scribble_stale_rows(cache, cursors, max_len: int, seed: int = 0):
+    """Overwrite rows >= cursor of every per-row cache leaf with garbage.
+
+    ``cache``: any pytree whose per-row leaves carry exactly one axis of
+    size ``max_len`` (the LM per-block ``{k, v[, *_scale]}`` dicts and
+    the sim layer-stacked slab both qualify); leaves without such an
+    axis (e.g. cursor vectors) pass through untouched. ``cursors``: per
+    slot, the count of rows legitimately written — everything at or past
+    it is fair game. Garbage by dtype: int8 gets full-range values,
+    other ints get 1 (a plausible time / a *valid-looking* segment id —
+    strictly nastier than the -1 "masked" sentinel fresh caches use),
+    floats get huge noise. Test sizes must keep ``max_len`` and the slot
+    count distinct from every other axis length.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(cursors)
+    cur = np.asarray(cursors)
+
+    def leaf(x):
+        shape = x.shape
+        if shape.count(max_len) != 1:
+            assert max_len not in shape, f"ambiguous row axis in {shape}"
+            return x
+        row_ax = shape.index(max_len)
+        batch_ax = [i for i, s in enumerate(shape)
+                    if s == n and i != row_ax]
+        assert batch_ax, f"no slot axis of size {n} in {shape}"
+        rows = np.arange(max_len).reshape(
+            [-1 if i == row_ax else 1 for i in range(len(shape))])
+        cur_b = cur.reshape(
+            [-1 if i == batch_ax[0] else 1 for i in range(len(shape))])
+        stale = rows >= cur_b
+        x_np = np.asarray(x)
+        if x_np.dtype == np.int8:
+            junk = rng.integers(-128, 128, shape).astype(np.int8)
+        elif np.issubdtype(x_np.dtype, np.integer):
+            junk = np.ones(shape, x_np.dtype)
+        else:
+            junk = (rng.standard_normal(shape) * 100.0).astype(x_np.dtype)
+        return np.where(stale, junk, x_np)
+
+    return jax.tree.map(leaf, cache)
+
+
+def assert_bit_identical(got, want, label: str):
+    got, want = np.asarray(got), np.asarray(want)
+    same = np.array_equal(got, want)
+    if not same:
+        bad = np.flatnonzero((got != want).ravel())
+        raise AssertionError(
+            f"{label}: {bad.size}/{got.size} elements differ "
+            f"(first at flat index {bad[0]}; "
+            f"max |diff| {np.abs(got.astype(np.float64) - want.astype(np.float64)).max()})")

@@ -182,6 +182,87 @@ def test_server_continuous_batching():
         assert all(0 <= t < CFG.padded_vocab for t in r.generated)
 
 
+def test_server_int8_slot_reuse_matches_solo():
+    """The int8 KV cache path (PR 5) through the serving loop: more
+    requests than slots, every request's greedy tokens must match its own
+    solo decode in a fresh int8 server — slot recycling under
+    quantize-on-write included."""
+    model = TransformerLM(CFG)
+    params = nnm.init_params(model.specs(), jax.random.key(4))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, 100, rng.integers(2, 7)) for _ in range(5)]
+
+    refs = {}
+    for uid, p in enumerate(prompts):
+        solo = Server(model, params, num_slots=1, max_len=64,
+                      cache_dtype="int8")
+        solo.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
+        refs[uid] = solo.run_until_drained()[uid].generated
+
+    srv = Server(model, params, num_slots=2, max_len=64, cache_dtype="int8")
+    for uid, p in enumerate(prompts):          # 5 requests over 2 slots
+        srv.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
+    done = srv.run_until_drained()
+    assert sorted(done) == list(range(5))
+    for uid in done:
+        assert done[uid].generated == refs[uid], uid
+
+
+def test_server_int8_eos_retirement():
+    """eos retirement under int8: learn the greedy continuation, declare
+    its third token the eos, and check the server stops there (and that
+    the early-freed slot serves the next request correctly)."""
+    model = TransformerLM(CFG)
+    params = nnm.init_params(model.specs(), jax.random.key(6))
+    prompt = np.asarray([9, 33, 71], np.int32)
+    probe = Server(model, params, num_slots=1, max_len=64,
+                   cache_dtype="int8")
+    probe.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    ref = probe.run_until_drained()[0].generated
+    eos = ref[2]
+    assert eos not in ref[:2], "degenerate continuation; pick another seed"
+
+    srv = Server(model, params, num_slots=1, max_len=64, eos_id=eos,
+                 cache_dtype="int8")
+    srv.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    srv.submit(Request(uid=1, prompt=prompt, max_new_tokens=2))
+    done = srv.run_until_drained()
+    assert done[0].generated == ref[:3]        # retired AT the eos token
+    assert done[1].generated == ref[:2]        # recycled slot, same prefix
+
+
+@pytest.mark.parametrize("cache_dtype", ["float32", "int8"])
+def test_server_cursor_restart_masks_stale_rows(cache_dtype):
+    """Cursor-restart isolation, shared contract with the sim-side suite
+    (tests/test_sim_server.py): after a long request retires, its rows
+    stay in the cache — scribble them (and everything else beyond each
+    slot's cursor) with adversarial garbage via the common helper, then
+    demand the next request's tokens match a fresh server bit-for-bit."""
+    from serving_utils import scribble_stale_rows
+
+    model = TransformerLM(CFG)
+    params = nnm.init_params(model.specs(), jax.random.key(7))
+    rng = np.random.default_rng(8)
+    victim = rng.integers(1, 100, 5)
+
+    fresh = Server(model, params, num_slots=1, max_len=64,
+                   cache_dtype=cache_dtype)
+    fresh.submit(Request(uid=0, prompt=victim, max_new_tokens=6))
+    ref = fresh.run_until_drained()[0].generated
+
+    srv = Server(model, params, num_slots=1, max_len=64,
+                 cache_dtype=cache_dtype)
+    srv.submit(Request(uid=9, prompt=rng.integers(1, 100, 20),
+                       max_new_tokens=30))     # long predecessor
+    srv.run_until_drained()
+    assert srv.slots[0].request is None
+    srv.cache = scribble_stale_rows(srv.cache, np.zeros(1, np.int32),
+                                    srv.max_len, seed=2)
+    srv.submit(Request(uid=0, prompt=victim, max_new_tokens=6))
+    got = srv.run_until_drained()[0].generated
+    assert got == ref
+
+
 def test_server_matches_sequential_decode():
     """Continuous batching must produce the same greedy tokens as a lone
     sequential decode of the same prompt (per-slot cursor correctness)."""
