@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import attention, encodings, se2
+from repro.core import attention, encodings
 
 
 def make_pair(head_dim=24, num_terms=18):

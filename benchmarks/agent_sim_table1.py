@@ -13,7 +13,6 @@ on turning scenes.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax

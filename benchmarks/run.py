@@ -16,6 +16,12 @@ Prints ``name,value,notes`` CSV rows. Modules:
                        arrivals: scenes/s + p50/p99 tick latency per
                        slot count, slab accounting, parity vs batch
                        eval -> BENCH_serve.json
+  fleet_bench        — scene-sharded fleet rollouts on a forced
+                       multi-device CPU mesh: scenes/s vs device count
+                       (bit-parity enforced) + the real-budget Table-I
+                       comparison through the dp_compress training path
+                       -> BENCH_fleet.json (runs in a subprocess; see
+                       its docstring)
   adaptive_basis     — beyond-paper: scale-adaptive basis truncation
   kernel_bench       — kernel micro-times + Pallas/oracle parity
                        (fwd, bwd, and ragged-decode modes)
@@ -97,6 +103,8 @@ def main() -> None:
                     help="run rollout_bench at CI (smoke) size")
     ap.add_argument("--serve-smoke", action="store_true",
                     help="run serve_bench at CI (smoke) size")
+    ap.add_argument("--fleet-smoke", action="store_true",
+                    help="run fleet_bench at CI (smoke) size")
     args = ap.parse_args()
 
     from benchmarks import (adaptive_basis, agent_sim_table1, approx_error,
@@ -125,6 +133,29 @@ def main() -> None:
                                    out="/tmp/BENCH_serve_smoke.json")
         return serve_bench.run(report)
 
+    def run_fleet(report):
+        # fleet_bench needs XLA's forced host device count set BEFORE the
+        # first jax init, and this process has already initialized jax by
+        # the time benchmarks import — so it runs in a fresh subprocess
+        # (its __main__ sets the flag) and its CSV rows are relayed.
+        import subprocess
+        here = os.path.dirname(os.path.abspath(__file__))
+        cmd = [sys.executable, os.path.join(here, "fleet_bench.py")]
+        if args.fleet_smoke:
+            cmd.append("--smoke")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(here, "..", "src"),
+                        env.get("PYTHONPATH")) if p)
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True)
+        for line in out.stdout.splitlines():
+            if line.startswith("fleet_bench/"):
+                parts = (line.split(",", 2) + ["", ""])[:3]
+                report(parts[0], parts[1], parts[2])
+        if out.returncode:
+            sys.stderr.write(out.stderr[-4000:])
+            raise RuntimeError(f"fleet_bench exited {out.returncode}")
+
     benches = {
         "approx_error": lambda r: approx_error.run(r),
         "attention_scaling": lambda r: attention_scaling.run(r),
@@ -138,6 +169,7 @@ def main() -> None:
             r, steps=args.train_bench_steps),
         "rollout_bench": run_rollout,
         "serve_bench": run_serve,
+        "fleet_bench": run_fleet,
         "roofline_summary": lambda r: roofline_summary(r),
     }
     only = set(args.only.split(",")) if args.only else set(benches)

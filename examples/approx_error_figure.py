@@ -7,7 +7,6 @@ import sys
 
 sys.path.insert(0, ".")
 
-import numpy as np
 
 from benchmarks.approx_error import BF16_EPS, FP16_EPS, spectral_error
 

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 

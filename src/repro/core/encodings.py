@@ -41,7 +41,7 @@ dimension ``pose_dim`` (1 for R, 2 for R^2, 3 for SE(2)).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 import numpy as np

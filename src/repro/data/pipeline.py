@@ -10,13 +10,11 @@ Design for 1000+ node clusters:
 """
 from __future__ import annotations
 
-import dataclasses
 import logging
 import queue
 import threading
 from typing import Any, Callable, Dict, Iterator, Optional
 
-import numpy as np
 
 
 class ShardedIterator:

@@ -16,7 +16,6 @@ EXPERIMENTS.md §Perf for the roofline impact on the multi-pod mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -18,7 +18,6 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Logical axis -> tuple of mesh axes, in priority order. "fsdp" axes shard
@@ -185,7 +184,9 @@ def derive_opt_shardings(spec_tree, opt_state, mesh, rules=None):
         spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
 
     def param_like(subtree):
-        leaves = spec_treedef.flatten_up_to(subtree)
+        # shardings come from the ParamSpecs alone; the subtree only
+        # proves the pytree structure matches (flatten_up_to would raise)
+        spec_treedef.flatten_up_to(subtree)
         out = [NamedSharding(mesh, spec_for(s.shape, s.axes, mesh, rules))
                for s in spec_leaves]
         return spec_treedef.unflatten(out)

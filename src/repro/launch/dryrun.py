@@ -32,12 +32,10 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_NAMES, SHAPES, SIM_ARCH_NAMES, get_config,
                            get_sim_arch)
-from repro.distributed.sharding import (DEFAULT_RULES, batch_sharding,
-                                        derive_opt_shardings,
+from repro.distributed.sharding import (DEFAULT_RULES, derive_opt_shardings,
                                         sharding_for_specs, use_mesh_rules)
 from repro.launch.mesh import HW, make_production_mesh
 from repro.launch.roofline import (CollectiveStats, model_flops_for,

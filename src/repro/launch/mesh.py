@@ -8,7 +8,7 @@ device state (the dry-run sets XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 
@@ -24,6 +24,28 @@ def make_mesh_for(num_devices: Optional[int] = None, model_axis: int = None):
     n = num_devices or len(jax.devices())
     m = model_axis or (2 if n % 2 == 0 and n > 1 else 1)
     return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+def make_fleet_mesh(num_devices: Optional[int] = None, *, pods: int = 1):
+    """Scene-axis mesh for fleet rollouts / closed-loop eval.
+
+    The rollout tick is data-parallel over scene slots (no tensor
+    parallelism — the sim models are small; the scale axis is scenes), so
+    the fleet mesh carries only the DP axes ``("pod", "data")`` that
+    :class:`repro.runtime.RolloutEngine` shard_maps its lanes over.
+    ``num_devices`` defaults to every visible device and may name a
+    PREFIX subset (the fleet-bench scaling sweep builds meshes over 1, 2,
+    4, ... devices inside one forced-device-count process); ``pods``
+    splits a leading cross-pod axis off for multi-pod runs.
+    """
+    import numpy as np
+
+    devs = jax.devices()[:num_devices] if num_devices else jax.devices()
+    n = len(devs)
+    if n % max(pods, 1) != 0:
+        raise ValueError(f"{n} devices do not split into {pods} pods")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs).reshape(pods, n // pods), ("pod", "data"))
 
 
 # Hardware constants for the roofline model (TPU v5e).

@@ -12,10 +12,9 @@ import logging
 import signal
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.data import synthetic_lm
 from repro.data.pipeline import ShardedIterator
 from repro.distributed.sharding import (derive_opt_shardings,

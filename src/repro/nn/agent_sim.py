@@ -30,15 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import se2
 from repro.core.encodings import GroupEncoding, make_encoding
-from repro.distributed.sharding import logical_constraint
 from repro.kernels import ops as kops
 from repro.kernels.flash_decode import canonical_cache_dtype, quantize_kv
 from repro.nn.attention import _merge_heads, _split_heads
 from repro.nn.layers import Dense, RMSNorm
 from repro.nn.mlp import GatedMLP
-from repro.nn.module import ParamSpec, stack_specs
+from repro.nn.module import stack_specs
 
 
 @dataclasses.dataclass(frozen=True)

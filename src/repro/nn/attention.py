@@ -23,7 +23,7 @@ serve steps are shape-stable under jit).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,6 @@ from repro.kernels import ops as kops
 from repro.kernels.flash_decode import (canonical_cache_dtype, dequantize_kv,
                                         quantize_kv)
 from repro.nn.layers import Dense
-from repro.nn.module import ParamSpec
 
 
 def _split_heads(x, num_heads, head_dim):
@@ -208,7 +207,6 @@ class Attention:
         (quantize-on-write; see ``repro.kernels.flash_decode``)."""
         dtype = canonical_cache_dtype(dtype, default=jnp.bfloat16)
         hd = self.head_dim
-        rd = self._rot_dim
         # cache stores encoded keys; for dim-preserving encodings hd is right
         if self.encoding is not None and self.encoding.transforms_values:
             raise NotImplementedError(

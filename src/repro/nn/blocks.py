@@ -14,7 +14,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
-import jax
 import jax.numpy as jnp
 
 from repro.nn.attention import Attention, MLAttention

@@ -7,7 +7,7 @@ sharding layer; nothing here touches a mesh directly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

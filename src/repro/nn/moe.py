@@ -36,7 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (active_mesh, dp_shard_count,
                                         logical_constraint)
-from repro.nn.layers import ACTIVATIONS, Dense
+from repro.nn.layers import ACTIVATIONS
 from repro.nn.mlp import GatedMLP
 from repro.nn.module import ParamSpec
 

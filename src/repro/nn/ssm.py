@@ -18,14 +18,13 @@ computed via pairwise differences of the within-chunk cumulative log-decay
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.sharding import logical_constraint
-from repro.nn.layers import Dense, RMSNorm
+from repro.nn.layers import Dense
 from repro.nn.module import ParamSpec
 
 

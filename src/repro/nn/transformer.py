@@ -14,9 +14,7 @@ Group patterns cover the architectures' structure:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

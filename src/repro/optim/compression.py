@@ -17,7 +17,6 @@ gradients still reduce at full precision over ICI.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -135,7 +135,8 @@ def evaluate_scenes(engine, scenes: Sequence[Scene],
     families share the config's static shapes (validity masks carry the
     per-scene variation), so slots mix freely and the jitted prefill/step
     compile once. Returns ``{family: {metric: mean, n_scenes, n_agents}}``
-    plus an ``"overall"`` row weighted by scene count.
+    plus an ``"overall"`` row; every aggregate row weights each scene by
+    its valid-agent count (see :func:`_aggregate`).
     """
     futures = engine.run([s.tensors for s in scenes],
                          t_hist=eval_cfg.t_hist,
@@ -155,10 +156,27 @@ def evaluate_scenes(engine, scenes: Sequence[Scene],
 
 
 def _aggregate(rows: List[Dict[str, float]]) -> Dict[str, float]:
+    """Agent-weighted mean of per-scene metric rows.
+
+    Every metric in ``scene_metrics`` is a mean over a scene's VALID
+    agents (or their agent-steps — each valid agent contributes the same
+    fixed rollout horizon), so the family/overall aggregate weights each
+    row by its ``n_agents``: the result equals the mean over all valid
+    agents pooled across scenes. An unweighted mean of rows would let a
+    1-agent scene move the table as much as a 30-agent scene, which at
+    10k-scene fleet budgets materially skews the reported rows toward
+    whichever families generate sparse scenes.
+    """
     agg = {}
     for m in METRICS:
-        vals = [r[m] for r in rows if np.isfinite(r[m])]
-        agg[m] = float(np.mean(vals)) if vals else float("nan")
+        pairs = [(r[m], r["n_agents"]) for r in rows
+                 if np.isfinite(r[m]) and r["n_agents"] > 0]
+        if pairs:
+            v = np.asarray([p[0] for p in pairs], np.float64)
+            w = np.asarray([p[1] for p in pairs], np.float64)
+            agg[m] = float((v * w).sum() / w.sum())
+        else:
+            agg[m] = float("nan")
     agg["n_scenes"] = float(len(rows))
     agg["n_agents"] = float(np.sum([r["n_agents"] for r in rows]))
     return agg
@@ -168,15 +186,22 @@ def evaluate_families(model, params, scen_cfg: ScenarioConfig,
                       eval_cfg: EvalConfig, *,
                       families: Optional[Sequence[str]] = None,
                       n_scenes_per_family: int = 4, scene_seed: int = 777,
-                      num_slots: Optional[int] = None
+                      num_slots: Optional[int] = None, mesh=None
                       ) -> Dict[str, Dict[str, float]]:
     """Generate ``n_scenes_per_family`` scenes for every family and run
-    the closed-loop evaluation in one mixed batch."""
+    the closed-loop evaluation in one mixed batch.
+
+    ``mesh``: optional scene-axis mesh (``launch.mesh.make_fleet_mesh``)
+    — the engine then ``shard_map``s its tick over the slot axis, with
+    per-scene results bit-identical to the single-device path (see
+    ``docs/distributed.md``).
+    """
     from repro.runtime.rollout import RolloutEngine
 
     fams = list(families) if families is not None else registry.names()
     scenes = [registry.generate_scene(f, scene_seed, i, scen_cfg)
               for f in fams for i in range(n_scenes_per_family)]
     slots = num_slots or min(32, len(scenes) * eval_cfg.n_samples)
-    engine = RolloutEngine(model, params, scen_cfg, num_slots=slots)
+    engine = RolloutEngine(model, params, scen_cfg, num_slots=slots,
+                           mesh=mesh)
     return evaluate_scenes(engine, scenes, eval_cfg)

@@ -28,9 +28,24 @@ class StepTimer:
         self._t0 = time.perf_counter()
 
     def stop(self) -> float:
+        """NaN-safe: ``stop`` without a matching ``start`` (retry paths
+        re-entering the loop after an exception, or a double-stop) returns
+        NaN and records nothing, instead of raising ``TypeError`` on
+        ``None - float`` or double-counting one interval as two samples.
+        ``_t0`` is consumed by the stop, so each ``start`` yields at most
+        one sample."""
+        if self._t0 is None:
+            return float("nan")
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         self.times.append(dt)
         return dt
+
+    @property
+    def count(self) -> int:
+        """Samples currently in the rolling window (feeds
+        :meth:`StragglerPolicy.evaluate`'s per-rank ``counts`` gate)."""
+        return len(self.times)
 
     @property
     def median(self) -> float:
@@ -40,6 +55,19 @@ class StepTimer:
         return s[len(s) // 2]
 
 
+def _lower_median(sorted_vals: List[float]) -> float:
+    """Median that takes the LOWER middle for even-length inputs.
+
+    The fleet baseline must not be dragged up by the straggler itself:
+    with the upper-middle pick (``vals[n // 2]``) a 2-rank fleet's
+    "median" IS the slow rank, so ``slow > factor * slow`` never holds
+    and a 2-host straggler is structurally unflaggable. The lower middle
+    keeps the baseline at the healthy rank (and is the exact median for
+    odd fleets).
+    """
+    return sorted_vals[(len(sorted_vals) - 1) // 2]
+
+
 @dataclasses.dataclass
 class StragglerPolicy:
     """Flags ranks whose rolling median step time is anomalously slow."""
@@ -47,15 +75,37 @@ class StragglerPolicy:
     straggler_factor: float = 1.5
     min_samples: int = 10
 
-    def evaluate(self, medians: Dict[int, float]) -> List[int]:
-        """medians: rank -> rolling median step seconds. Returns flagged
-        ranks (candidates for preemptive replacement / checkpoint-evict)."""
-        vals = [v for v in medians.values() if math.isfinite(v)]
-        if len(vals) < 1:
+    def evaluate(self, medians: Dict[int, float],
+                 counts: Optional[Dict[int, int]] = None) -> List[int]:
+        """medians: rank -> rolling median step seconds; counts: rank ->
+        number of step samples behind that median (e.g.
+        ``StepTimer.count``). Returns flagged ranks (candidates for
+        preemptive replacement / checkpoint-evict).
+
+        A rank participates — on either side of the comparison — only
+        once its median rests on at least ``min_samples`` steps:
+        flagging a host off a single noisy step (or letting that step
+        define the fleet baseline) churns replacements for free. When
+        ``counts`` is omitted the fleet as a whole must carry
+        ``min_samples`` finite medians before any flag is raised.
+        """
+        def warmed(r: int) -> bool:
+            return counts is None or counts.get(r, 0) >= self.min_samples
+
+        eligible = {r: v for r, v in medians.items()
+                    if math.isfinite(v) and warmed(r)}
+        if not eligible or (counts is None
+                            and len(eligible) < self.min_samples):
             return []
-        fleet = sorted(vals)[len(vals) // 2]
-        return [r for r, v in medians.items()
-                if math.isfinite(v) and v > self.straggler_factor * fleet]
+        fleet = _lower_median(sorted(eligible.values()))
+        return [r for r, v in eligible.items()
+                if v > self.straggler_factor * fleet]
+
+    def evaluate_timers(self, timers: Dict[int, "StepTimer"]) -> List[int]:
+        """Convenience wrapper: derive (medians, counts) from per-rank
+        :class:`StepTimer`\\ s — the host-side all-gather payload."""
+        return self.evaluate({r: t.median for r, t in timers.items()},
+                             {r: t.count for r, t in timers.items()})
 
 
 @dataclasses.dataclass

@@ -21,9 +21,14 @@ from typing import Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import kinematics
 from repro.scenarios.core import ScenarioConfig
+
+#: mesh axes a fleet engine partitions its scene slots over, in order
+FLEET_AXES = ("pod", "data")
 
 
 def step_kinematics(pose, speed, accel, yaw_rate,
@@ -57,7 +62,8 @@ class RolloutEngine:
 
     def __init__(self, model, params, scen_cfg: ScenarioConfig,
                  *, num_slots: int, max_len: Optional[int] = None,
-                 cache_dtype=None, decode_impl: Optional[str] = None):
+                 cache_dtype=None, decode_impl: Optional[str] = None,
+                 mesh=None):
         """``cache_dtype``: storage dtype of the per-layer K/V cache — a
         jnp dtype or "float32" / "bfloat16" / "int8" (int8 caches carry
         per-row scales beside K/V and are dequantized inside the decode
@@ -66,10 +72,24 @@ class RolloutEngine:
         ("auto" / "flash_decode" / "xla" / "ref" / "chunked" — see
         ``repro.kernels.ops.decode_attention``); None keeps the model
         config's choice.
+
+        ``mesh``: optional scene-axis mesh (``launch.mesh.make_fleet_mesh``)
+        carrying the DP axes in :data:`FLEET_AXES`. When set, the jitted
+        prefill/tick are ``shard_map``-ed over the slot axis: ``num_slots``
+        lanes partition over ``("pod", "data")`` (rounded UP to a multiple
+        of the shard count — ``run`` already pads partial chunks), params
+        replicate, and each device advances only its local lanes. Per-slot
+        PRNG keys and validity masks are computed on the HOST exactly as in
+        the single-device path, every lane's attention / sampling /
+        integration is lane-local, and lanes never interact — so gathered
+        per-scene outputs are bit-identical to the unsharded engine
+        regardless of device count or slot placement
+        (tests/test_distributed.py pins this on a forced CPU mesh).
         """
         self.model = model
         self.params = params
         self.scen = scen_cfg
+        self.mesh = mesh
         self.num_slots = num_slots
         max_len = max_len or (scen_cfg.num_map
                               + scen_cfg.num_steps * scen_cfg.num_agents)
@@ -81,20 +101,53 @@ class RolloutEngine:
         self.decode_impl = decode_impl
         self._accel = jnp.asarray(scen_cfg.accel_values(), jnp.float32)
         self._yaw = jnp.asarray(scen_cfg.yaw_values(), jnp.float32)
+        prefill_fn = functools.partial(model.prefill, impl=decode_impl)
+        step_fn = self._step_impl
+        self._cache_shardings = None
+        if mesh is not None:
+            lane_axes = tuple(a for a in FLEET_AXES if a in mesh.shape)
+            extra = [a for a in mesh.shape
+                     if a not in lane_axes and mesh.shape[a] > 1]
+            if not lane_axes or extra:
+                raise ValueError(
+                    f"fleet mesh must carry only the scene axes "
+                    f"{FLEET_AXES}; got {dict(mesh.shape)}")
+            shards = int(np.prod([mesh.shape[a] for a in lane_axes]))
+            self.num_slots = -(-num_slots // shards) * shards
+            lane = P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
+            # cache leaves: layer-stacked K/V rows carry the slot axis at
+            # dim 1 (L, B, H, S, .); times/seg/cursor carry it at dim 0
+            cache_struct = jax.eval_shape(self.init_cache)
+            stacked = set(model._LAYER_CACHE_KEYS)
+            cache_spec = {k: (P(None, *lane) if k in stacked else lane)
+                          for k in cache_struct}
+            self._cache_shardings = {
+                k: NamedSharding(mesh, s) for k, s in cache_spec.items()}
+            prefill_fn = shard_map(
+                prefill_fn, mesh=mesh,
+                in_specs=(P(), cache_spec, lane),
+                out_specs=(lane, cache_spec), check_rep=False)
+            step_fn = shard_map(
+                step_fn, mesh=mesh,
+                in_specs=(P(), cache_spec) + (lane,) * 6 + (P(),),
+                out_specs=(cache_spec,) + (lane,) * 4, check_rep=False)
         # Donate the cache so XLA updates it in place: without donation
         # every tick round-trips the full preallocated K/V cache through
         # a copy, which dwarfs the attention work the decode kernel
         # saves (the cache is tens of MiB per slot batch).
-        self._prefill = jax.jit(
-            functools.partial(model.prefill, impl=decode_impl),
-            donate_argnums=(1,))
-        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
         self.ticks = 0
         self.last_actions = None      # (S, K, T_fut, A) after each run()
 
     def init_cache(self):
-        return self.model.init_cache(self.num_slots, self.max_len,
-                                     self.cache_dtype)
+        cache = self.model.init_cache(self.num_slots, self.max_len,
+                                      self.cache_dtype)
+        if self._cache_shardings is not None:
+            # place slot-sharded from the start, so the prefill donation
+            # reuses the buffers instead of resharding a replicated copy
+            cache = jax.device_put(cache, self._cache_shardings)
+        return cache
 
     def _step_impl(self, params, cache, logits, pose, speed, feats_proto,
                    valid, keys, t):
@@ -106,8 +159,15 @@ class RolloutEngine:
         ``valid`` (B, A) marks each slot's real agents (families generate
         variable agent counts padded to A slots); invalid agents are frozen
         in place and their tokens enter the cache segment-masked, so they
-        never influence attention or metrics."""
+        never influence attention or metrics.
+
+        ``keys`` arrive as raw uint32 key DATA (B, 2), not typed key
+        arrays: the fleet path shard_maps this function over the slot
+        axis and plain arrays partition like any other per-lane input.
+        ``wrap_key_data`` reconstructs the identical typed keys, so the
+        sampled stream is unchanged."""
         b, a, _ = feats_proto.shape
+        keys = jax.random.wrap_key_data(keys)
         keys_t = jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, t)
         acts = jax.vmap(jax.random.categorical)(
             keys_t, logits.astype(jnp.float32))           # (B, A)
@@ -168,7 +228,10 @@ class RolloutEngine:
         t_total = t_total or self.scen.num_steps
         n_scenes = len(scenes)
         total = n_scenes * n_samples
-        keys_all = rollout_keys(seed, n_scenes, n_samples)
+        # host-side key plumbing: the per-(scene, sample) stream is fixed
+        # before any slot/shard assignment, so placement can't change it
+        keys_all = np.asarray(
+            jax.random.key_data(rollout_keys(seed, n_scenes, n_samples)))
 
         def lane_hist(flat_idx):
             s = scenes[flat_idx // n_samples]
@@ -186,7 +249,7 @@ class RolloutEngine:
                      for i in range(self.num_slots)]  # pad tail by repeating
             hist = {k: jnp.asarray(np.stack([lane_hist(i)[k] for i in lanes]))
                     for k in lane_hist(0)}
-            keys = keys_all[jnp.asarray(lanes)]
+            keys = jnp.asarray(keys_all[np.asarray(lanes)])
             fut, acts = self._run_chunk(hist, keys, t_hist, t_total)
             futures.append(np.asarray(fut[:total - start]))
             actions.append(np.asarray(acts[:total - start]))

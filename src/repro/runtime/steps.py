@@ -8,15 +8,13 @@ configs) and sharded via the logical-axis rules.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.distributed.sharding import (DEFAULT_RULES, batch_sharding,
-                                        logical_constraint, spec_for)
-from repro.nn import module as nnm
+from repro.distributed.sharding import batch_sharding, spec_for
 from repro.nn.module import cast_params
 from repro.nn.transformer import build_model
 from repro.optim.transforms import Optimizer, apply_updates

@@ -25,15 +25,13 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import math
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import ShardedIterator
-from repro.runtime.monitor import NaNGuard, StepTimer, StragglerPolicy
+from repro.runtime.monitor import NaNGuard, StepTimer
 
 log = logging.getLogger("repro.trainer")
 

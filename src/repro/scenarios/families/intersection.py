@@ -23,7 +23,7 @@ import numpy as np
 from repro.scenarios import registry
 from repro.scenarios.core import Scene, ScenarioConfig, assemble_scene
 from repro.scenarios.lane_graph import LaneGraph, arc_lane, straight_lane
-from repro.scenarios.policies import agent_on_route, simulate, spaced_starts
+from repro.scenarios.policies import agent_on_route, simulate
 
 HALF_BOX = 10.0        # intersection half-extent (stop-line distance)
 LANE_OFF = 1.75        # right-hand lane offset from the road centerline

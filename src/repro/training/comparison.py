@@ -36,7 +36,9 @@ from repro.runtime.evaluation import EvalConfig, evaluate_families
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.training.data import holdout_batches, make_batch_fn
 from repro.training.steps import (bc_optimizer, loss_summary,
-                                  make_sim_train_step, open_loop_metrics)
+                                  make_sim_dp_train_step,
+                                  make_sim_train_step, open_loop_metrics,
+                                  sim_dp_state)
 
 log = logging.getLogger("repro.training.comparison")
 
@@ -52,7 +54,8 @@ CLOSED_LOOP_METRICS = ("min_ade", "miss_rate", "collision_rate",
 
 def train_one(arch: SimArch, *, steps: int, batch: int, lr: float = 3e-3,
               seed: int = 0, ckpt_dir: Optional[str] = None,
-              eval_every: int = 0, eval_cb=None
+              eval_every: int = 0, eval_cb=None, mesh=None,
+              dp_compress: bool = True
               ) -> Tuple[AgentSimModel, object, Dict[str, float]]:
     """Train one encoding through the fault-tolerant Trainer.
 
@@ -60,19 +63,32 @@ def train_one(arch: SimArch, *, steps: int, batch: int, lr: float = 3e-3,
     loss trajectory endpoints so callers can assert training actually
     moved. A fresh ``ckpt_dir`` per call keeps encodings from restoring
     each other's checkpoints; pass an existing one to resume.
+
+    ``mesh``: optional DP mesh — the run then goes through
+    :func:`make_sim_dp_train_step` (shard_map over the mesh's
+    ``("pod", "data")`` axes, with ``dp_compress`` selecting the int8 +
+    error-feedback cross-pod reduction when a "pod" axis is present), so
+    fleet-budget comparisons exercise the production gradient path rather
+    than a single-device twin.
     """
     cfg = arch.agent_sim_config()
     scen = arch.scenario_config()
     model = AgentSimModel(cfg)
     params = nnm.init_params(model.specs(), jax.random.key(seed))
     opt = bc_optimizer(lr, steps)
-    step_fn = jax.jit(make_sim_train_step(model, opt))
+    if mesh is None:
+        step_fn = jax.jit(make_sim_train_step(model, opt))
+        opt_state = opt.init(params)
+    else:
+        step_fn = jax.jit(make_sim_dp_train_step(model, opt, mesh,
+                                                 compress=dp_compress))
+        opt_state = sim_dp_state(opt, params)
     data = ShardedIterator(make_batch_fn(scen), batch_size=batch, seed=seed)
     if ckpt_dir is None:
         ckpt_dir = tempfile.mkdtemp(prefix=f"simcmp_{arch.encoding}_")
     t0 = time.time()
     trainer = Trainer(
-        step_fn, params, opt.init(params), data, ckpt_dir,
+        step_fn, params, opt_state, data, ckpt_dir,
         TrainerConfig(total_steps=steps, ckpt_every=max(steps, 1),
                       log_every=max(1, steps // 5),
                       eval_every=eval_every),
@@ -98,7 +114,9 @@ def run_comparison(arch: SimArch,
                    seed: int = 0, holdout_n: int = 4,
                    n_scenes_per_family: int = 2, eval_samples: int = 4,
                    ckpt_root: Optional[str] = None,
-                   report=None) -> Dict[str, Dict[str, float]]:
+                   report=None, mesh=None, dp_compress: bool = True,
+                   eval_mesh=None, eval_num_slots: Optional[int] = None
+                   ) -> Dict[str, Dict[str, float]]:
     """Train every encoding under one budget; score open- and closed-loop.
 
     ``arch`` fixes everything except the encoding (size, scenario shapes,
@@ -106,6 +124,12 @@ def run_comparison(arch: SimArch,
     mechanism alone. Returns ``{encoding: row}`` plus a ``"summary"`` entry
     with the paper's qualitative claim (best relative NLL <= absolute NLL)
     evaluated on this run.
+
+    ``mesh``/``dp_compress`` route training through the sharded
+    compressed-DP step (see :func:`train_one`); ``eval_mesh`` runs the
+    closed-loop scoring through the scene-sharded fleet engine (with
+    ``eval_num_slots`` lanes) — at 10k+-scene budgets the eval dominates
+    wall-clock, so the fleet path is what makes real budgets reachable.
     """
     report = report or (lambda name, value, extra="": None)
     scen = arch.scenario_config()
@@ -119,17 +143,21 @@ def run_comparison(arch: SimArch,
         ckpt = (os.path.join(ckpt_root, enc) if ckpt_root else None)
         model, params, summary = train_one(
             arch_e, steps=steps, batch=batch, lr=lr, seed=seed,
-            ckpt_dir=ckpt)
+            ckpt_dir=ckpt, mesh=mesh, dp_compress=dp_compress)
         open_m = open_loop_metrics(model, params, holdout)
         closed = evaluate_families(
             model, params, scen, eval_cfg,
             n_scenes_per_family=n_scenes_per_family,
-            scene_seed=seed + 777)
+            scene_seed=seed + 777, mesh=eval_mesh,
+            num_slots=eval_num_slots)
         row = dict(summary)
         row["open_loop_nll"] = open_m["nll"]
         row["open_loop_accuracy"] = open_m["accuracy"]
         for m in CLOSED_LOOP_METRICS:
             row[f"closed_loop_{m}"] = closed["overall"][m]
+        # full per-family closed-loop tables ride along (agent-weighted;
+        # the fleet bench prints them as the paper's per-family rows)
+        row["families"] = {f: dict(v) for f, v in closed.items()}
         rows[enc] = row
         report(f"comparison/{enc}/open_loop_nll", f"{row['open_loop_nll']:.4f}",
                f"train_s={row['train_s']:.1f}")

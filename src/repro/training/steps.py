@@ -33,8 +33,8 @@ from repro.scenarios.core import ScenarioConfig
 from repro.training.data import TRAIN_KEYS
 
 __all__ = ["bc_optimizer", "loss_summary", "make_sim_train_step",
-           "make_sim_eval_step", "open_loop_metrics", "sim_input_specs",
-           "sim_batch_shardings"]
+           "make_sim_dp_train_step", "sim_dp_state", "make_sim_eval_step",
+           "open_loop_metrics", "sim_input_specs", "sim_batch_shardings"]
 
 
 def bc_optimizer(lr: float, steps: int) -> Optimizer:
@@ -91,6 +91,59 @@ def make_sim_train_step(model: AgentSimModel,
                    "accuracy": _masked_accuracy(logits, batch["actions"],
                                                 batch["agent_valid"])}
         return new_params, new_opt, metrics
+
+    return train_step
+
+
+def sim_dp_state(optimizer: Optimizer, params) -> Dict[str, Any]:
+    """Trainer-compatible state for :func:`make_sim_dp_train_step`: the
+    optimizer state plus the error-feedback residual the compressed
+    cross-pod reduction carries between steps (zeros at init — nothing
+    untransmitted yet)."""
+    return {"opt": optimizer.init(params),
+            "residual": jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+
+def make_sim_dp_train_step(model: AgentSimModel, optimizer: Optimizer,
+                           mesh, *, compress: bool = True) -> Callable:
+    """The fleet-scale BC update: same masked-NLL loss as
+    :func:`make_sim_train_step`, but the gradient reduction goes through
+    ``distributed.dp_compress.make_compressed_dp_step`` — shard_map over
+    the DP axes with a full-precision intra-pod psum and (when the mesh
+    carries a "pod" axis and ``compress`` is on) an int8 + error-feedback
+    cross-pod psum carrying the DCI gradient traffic.
+
+    Returns ``step(params, state, batch) -> (params, state, metrics)``
+    with ``state = sim_dp_state(...)`` (opt state + EF residual), so the
+    fault-tolerant :class:`~repro.runtime.trainer.Trainer` runs it
+    unmodified and checkpoints the residual alongside the optimizer.
+    ``batch`` must shard over the mesh's DP axes: the leading batch dim
+    has to divide their product.
+    """
+    from repro.distributed.dp_compress import make_compressed_dp_step
+
+    cfg = model.cfg
+    dp_size = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
+
+    def loss_fn(p32, batch):
+        p = cast_params(p32, cfg.compute_dtype)
+        logits, aux = model(p, batch)
+        return action_nll(logits, batch["actions"],
+                          batch["agent_valid"]) + aux
+
+    dp_step = make_compressed_dp_step(loss_fn, optimizer, mesh,
+                                      compress=compress)
+
+    def train_step(params, state, batch):
+        b = jax.tree.leaves(batch)[0].shape[0]
+        if b % dp_size:
+            raise ValueError(f"batch {b} does not divide the mesh's "
+                             f"{dp_size} DP shards")
+        params, opt_state, residual, loss = dp_step(
+            params, state["opt"], state["residual"], batch)
+        return params, {"opt": opt_state, "residual": residual}, \
+            {"loss": loss}
 
     return train_step
 

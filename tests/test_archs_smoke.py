@@ -5,7 +5,6 @@ run one forward pass, one optimizer (train) step, and one decode step where
 the family has one; assert output shapes and the absence of NaNs. The FULL
 configs are exercised only through the AOT dry-run (no allocation).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

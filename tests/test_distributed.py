@@ -10,7 +10,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -164,6 +163,87 @@ def test_compressed_dp_step_tracks_uncompressed():
     assert res["final_compressed"] < 1e-2
     assert res["final_uncompressed"] < 1e-2
     assert res["final_compressed"] < res["final_uncompressed"] * 10 + 1e-3
+
+
+def test_fleet_rollout_sharded_matches_single_device():
+    """Scene-sharded fleet eval == single-device engine, BIT-identical.
+
+    The fleet contract (docs/distributed.md): device placement must never
+    leak into results — per-slot PRNG keys and validity masks are computed
+    on the host from slot identity alone, so the shard_mapped tick is pure
+    partitioning. Checked on a ("pod", "data") = (2, 2) mesh, with a slot
+    count that doesn't divide the fleet (rounds up with dead lanes) and a
+    scene count that forces multiple chunks.
+    """
+    res = run_with_devices("""
+        import numpy as np
+        from repro.configs import get_sim_arch
+        from repro.launch.mesh import make_fleet_mesh
+        from repro.nn import module as nnm
+        from repro.nn.agent_sim import AgentSimModel
+        from repro.runtime.evaluation import EvalConfig, evaluate_scenes
+        from repro.runtime.rollout import RolloutEngine
+        from repro.scenarios import registry
+
+        arch = get_sim_arch("sim-se2-fourier").reduced().reduced(
+            num_map=12, num_agents=4, num_steps=8)
+        scen = arch.scenario_config()
+        model = AgentSimModel(arch.agent_sim_config())
+        params = nnm.init_params(model.specs(), jax.random.key(0))
+        fams = registry.names()
+        scenes = [registry.generate_scene(fams[i % len(fams)], 5, i, scen)
+                  for i in range(10)]
+        cfg = EvalConfig(t_hist=4, n_samples=2, seed=3)
+
+        ref = RolloutEngine(model, params, scen, num_slots=8)
+        mesh = make_fleet_mesh(4, pods=2)
+        # num_slots=6 does not divide the 4-way fleet: rounds up to 8
+        fleet = RolloutEngine(model, params, scen, num_slots=6, mesh=mesh)
+
+        f1 = ref.run([s.tensors for s in scenes], t_hist=4, n_samples=2,
+                     seed=3)
+        f2 = fleet.run([s.tensors for s in scenes], t_hist=4, n_samples=2,
+                       seed=3)
+        t1 = evaluate_scenes(ref, scenes, cfg)
+        t2 = evaluate_scenes(fleet, scenes, cfg)
+        flat = lambda t: {f"{f}/{m}": v for f, row in sorted(t.items())
+                          for m, v in sorted(row.items())}
+        print(json.dumps({
+            "bit_identical": bool(np.array_equal(f1, f2)),
+            "rounded_slots": fleet.num_slots,
+            "tables_equal": flat(t1) == flat(t2),
+            "overall_min_ade": t2["overall"]["min_ade"],
+        }))
+    """, n=4)
+    assert res["bit_identical"], res
+    assert res["tables_equal"], res
+    assert res["rounded_slots"] == 8
+    assert res["overall_min_ade"] == res["overall_min_ade"]  # finite
+
+
+def test_fleet_mesh_rejects_non_fleet_axes():
+    """RolloutEngine only shards scene lanes: a mesh carrying a model axis
+    must be rejected loudly, not silently replicate the cache."""
+    res = run_with_devices("""
+        from repro.configs import get_sim_arch
+        from repro.nn import module as nnm
+        from repro.nn.agent_sim import AgentSimModel
+        from repro.runtime.rollout import RolloutEngine
+
+        arch = get_sim_arch("sim-se2-fourier").reduced().reduced(
+            num_map=12, num_agents=4, num_steps=8)
+        model = AgentSimModel(arch.agent_sim_config())
+        params = nnm.init_params(model.specs(), jax.random.key(0))
+        try:
+            RolloutEngine(model, params, arch.scenario_config(),
+                          num_slots=8,
+                          mesh=jax.make_mesh((2, 2), ("data", "model")))
+            err = ""
+        except ValueError as e:
+            err = str(e)
+        print(json.dumps({"err": err}))
+    """, n=4)
+    assert "model" in res["err"], res
 
 
 def test_elastic_restore_across_mesh_shapes(tmp_path):

@@ -1,5 +1,4 @@
 """Tests for the group encodings and relative attention (Alg. 1 vs Alg. 2)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,7 +3,6 @@
 Sweeps shapes/dtypes and asserts allclose against ``repro.kernels.ref`` —
 the contract demanded for every Pallas kernel in this repo.
 """
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,4 @@
 """Tests for launch-layer pure logic: roofline parsing, report, input specs."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, SHAPES, get_config

@@ -1,0 +1,116 @@
+"""Fleet-monitor regression tests: the PR-7 fixes.
+
+Each test pins a bug that would have silently defanged the monitors on a
+real fleet: a ``min_samples`` gate that never gated, a fleet median that
+the straggler itself defined in 2-host fleets, and a timer that raised
+(or double-counted) when ``stop`` ran without a matching ``start``.
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ShardedIterator
+from repro.runtime.monitor import NaNGuard, StepTimer, StragglerPolicy
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy
+# ---------------------------------------------------------------------------
+
+def test_min_samples_gates_cold_ranks():
+    # a rank's median rests on 1 noisy step -> it must neither be flagged
+    # nor drag the fleet baseline around (the old guard was len(vals) < 1,
+    # i.e. dead for any non-empty fleet)
+    p = StragglerPolicy(straggler_factor=1.5, min_samples=10)
+    medians = {0: 1.0, 1: 1.0, 2: 5.0}
+    cold = {0: 10, 1: 10, 2: 3}
+    assert p.evaluate(medians, cold) == []
+    warm = {0: 10, 1: 10, 2: 10}
+    assert p.evaluate(medians, warm) == [2]
+
+
+def test_min_samples_gates_whole_fleet_without_counts():
+    # no per-rank counts -> the fleet itself must carry min_samples finite
+    # medians before any flag is raised
+    p = StragglerPolicy(straggler_factor=1.5, min_samples=4)
+    assert p.evaluate({0: 1.0, 1: 9.0}) == []
+    assert p.evaluate({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0}) == [3]
+
+
+def test_two_rank_straggler_is_flaggable():
+    # upper-middle median made the slow rank its own baseline: in a 2-host
+    # fleet a 2x straggler was structurally unflaggable
+    p = StragglerPolicy(straggler_factor=1.5, min_samples=2)
+    warm = {0: 100, 1: 100}
+    assert p.evaluate({0: 1.0, 1: 2.0}, warm) == [1]
+    assert p.evaluate({0: 1.0, 1: 1.2}, warm) == []
+
+
+def test_straggler_even_fleet_lower_median():
+    p = StragglerPolicy(straggler_factor=1.5, min_samples=1)
+    warm = {r: 10 for r in range(4)}
+    # two healthy + two slow: baseline stays at the healthy rank
+    assert sorted(p.evaluate({0: 1.0, 1: 1.0, 2: 3.0, 3: 4.0}, warm)) \
+        == [2, 3]
+    # non-finite medians (rank not yet reporting) are excluded, not fatal
+    assert p.evaluate({0: 1.0, 1: float("nan"), 2: 2.5}, warm) == [2]
+
+
+def test_evaluate_timers_derives_counts():
+    p = StragglerPolicy(straggler_factor=1.5, min_samples=3)
+    fast, slow, cold = StepTimer(), StepTimer(), StepTimer()
+    for t, dts in ((fast, [0.1] * 5), (slow, [0.5] * 5), (cold, [0.5])):
+        for dt in dts:
+            t.times.append(dt)
+    assert p.evaluate_timers({0: fast, 1: slow, 2: cold}) == [1]
+
+
+# ---------------------------------------------------------------------------
+# StepTimer
+# ---------------------------------------------------------------------------
+
+def test_step_timer_stop_without_start_is_nan():
+    t = StepTimer()
+    assert math.isnan(t.stop())          # no TypeError on None - float
+    assert t.count == 0
+    t.start()
+    assert t.stop() >= 0.0
+    assert t.count == 1
+    # double-stop: the interval must not be counted twice
+    assert math.isnan(t.stop())
+    assert t.count == 1
+    assert math.isfinite(t.median)
+
+
+# ---------------------------------------------------------------------------
+# NaNGuard, unit and through the Trainer
+# ---------------------------------------------------------------------------
+
+def test_nan_guard_recovers_between_runs():
+    g = NaNGuard(max_consecutive=3)
+    seq = [1.0, float("nan"), float("inf"), 2.0, float("nan")]
+    assert [g.check(x) for x in seq] == ["ok", "skip", "skip", "ok", "skip"]
+    assert g.total_skipped == 3
+    assert g.consecutive == 1
+
+
+def test_trainer_halts_on_consecutive_nans(tmp_path):
+    # systematic divergence: the Trainer must checkpoint and raise, not
+    # spin through the full budget skipping every step
+    def nan_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(float("nan"))}
+
+    data = ShardedIterator(
+        lambda seed, idx, b: {"x": np.zeros((b, 1), np.float32)},
+        batch_size=2, seed=0)
+    tr = Trainer(nan_step, {"w": jnp.zeros(2)}, {}, data, str(tmp_path),
+                 TrainerConfig(total_steps=50, ckpt_every=100,
+                               log_every=100, max_consecutive_nans=4))
+    with pytest.raises(FloatingPointError):
+        tr.run()
+    assert tr.nan_guard.consecutive == 4
+    assert tr.step < 50
+    data.close()

@@ -1,5 +1,4 @@
 """Tests for optim / checkpoint / data / monitor substrates."""
-import math
 import os
 
 import jax
@@ -7,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")   # optional dev dep; see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import ShardedIterator
@@ -174,7 +172,8 @@ def test_sharded_iterator_checkpoint_resume():
     cfg = synthetic_lm.LMDataConfig(vocab_size=64, seq_len=8)
     mk = lambda seed, idx, bs: synthetic_lm.generate_batch(seed, idx, bs, cfg)
     it = ShardedIterator(mk, batch_size=2, seed=3)
-    batches = [next(it) for _ in range(5)]
+    for _ in range(5):     # advance past the checkpoint point
+        next(it)
     state = it.state_dict()
     more = [next(it) for _ in range(3)]
     it.close()
@@ -230,7 +229,8 @@ def test_nan_guard():
 
 
 def test_straggler_policy():
-    p = StragglerPolicy(straggler_factor=1.5)
+    p = StragglerPolicy(straggler_factor=1.5, min_samples=10)
     medians = {0: 1.0, 1: 1.05, 2: 0.98, 3: 2.5}
-    assert p.evaluate(medians) == [3]
-    assert p.evaluate({0: 1.0, 1: 1.1}) == []
+    warm = {r: 10 for r in medians}
+    assert p.evaluate(medians, warm) == [3]
+    assert p.evaluate({0: 1.0, 1: 1.1}, {0: 10, 1: 10}) == []

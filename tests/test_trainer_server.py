@@ -1,5 +1,4 @@
 """End-to-end trainer (fault tolerance) and serving-loop tests."""
-import functools
 
 import jax
 import jax.numpy as jnp
