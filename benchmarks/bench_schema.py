@@ -1,0 +1,182 @@
+"""Schema checker for the committed ``BENCH_*.json`` records.
+
+The bench records at the repo root are the project's perf trajectory:
+sessions compare against them and docs cite them, so a bench refactor
+that silently renames ``tick_p50_ms`` or drops ``parity_vs_batch_eval``
+corrupts the record for every future reader. This checker pins the
+committed keys per bench — names, types, and basic sanity (finite,
+positive where a latency/throughput, percentile ordering) — without
+pulling in a JSON-schema dependency.
+
+Run:  python benchmarks/bench_schema.py            # checks repo root
+      python benchmarks/bench_schema.py FILE...    # specific records
+
+Exit status 1 if any record is missing keys or carries insane values.
+The CI ``obs-smoke`` job runs it, and ``tests/test_obs.py`` runs it on
+the committed records plus freshly generated smoke records.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import sys
+from typing import Any, Dict, List
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.abspath(os.path.join(HERE, ".."))
+
+Num = (int, float)
+
+
+class _Check:
+    def __init__(self, path: str):
+        self.path = path
+        self.problems: List[str] = []
+
+    def fail(self, msg: str):
+        self.problems.append(f"{os.path.basename(self.path)}: {msg}")
+
+    def require(self, d: Dict[str, Any], key: str, types, ctx: str = ""):
+        where = f"{ctx}.{key}" if ctx else key
+        if key not in d:
+            self.fail(f"missing key {where}")
+            return None
+        v = d[key]
+        if types is not None and not isinstance(v, types):
+            self.fail(f"{where} has type {type(v).__name__}, "
+                      f"wanted {types}")
+            return None
+        return v
+
+    def finite(self, d: Dict[str, Any], key: str, ctx: str = "",
+               positive: bool = False):
+        v = self.require(d, key, Num, ctx)
+        if v is None:
+            return None
+        where = f"{ctx}.{key}" if ctx else key
+        if not math.isfinite(v):
+            self.fail(f"{where} is not finite: {v}")
+        elif positive and v <= 0:
+            self.fail(f"{where} must be > 0, got {v}")
+        return v
+
+
+def check_serve(rec: Dict[str, Any], c: _Check):
+    for k in ("encoding", "backend", "cache_dtype"):
+        c.require(rec, k, str)
+    for k in ("n_scenes", "num_map", "num_agents", "num_steps", "t_hist"):
+        c.finite(rec, k, positive=True)
+    slots = c.require(rec, "slot_counts", dict)
+    for ns, row in (slots or {}).items():
+        ctx = f"slot_counts[{ns}]"
+        for k in ("ticks", "wall_s", "scenes_per_s", "tick_p50_ms",
+                  "tick_p99_ms", "slab_mib", "slab_rows", "no_slab_mib",
+                  "tick_p50_off_ms", "queue_wait_p50_ms",
+                  "first_action_p50_ms"):
+            c.finite(row, k, ctx, positive=True)
+        c.finite(row, "telemetry_overhead_p50", ctx)    # may be negative
+        p50, p99 = row.get("tick_p50_ms"), row.get("tick_p99_ms")
+        if isinstance(p50, Num) and isinstance(p99, Num) and p99 < p50:
+            c.fail(f"{ctx}: tick_p99_ms {p99} < tick_p50_ms {p50}")
+        if row.get("parity_vs_batch_eval") is not True:
+            c.fail(f"{ctx}: parity_vs_batch_eval is not true — the "
+                   "committed record must come from an isolating run")
+
+
+def check_rollout(rec: Dict[str, Any], c: _Check):
+    c.require(rec, "encoding", str)
+    for k in ("num_agents", "num_steps", "lanes", "live_len", "max_len"):
+        c.finite(rec, k, positive=True)
+    paths = c.require(rec, "paths", dict) or {}
+    for need in ("generic_cached", "ragged_f32"):
+        if need not in paths:
+            c.fail(f"paths.{need} missing")
+    for name, row in paths.items():
+        c.finite(row, "steps_per_s", f"paths.{name}", positive=True)
+        if "step_p50_ms" in row:        # registry-derived (newer records)
+            c.finite(row, "step_p50_ms", f"paths.{name}", positive=True)
+    c.finite(rec, "decode_speedup", positive=True)
+    flat = c.require(rec, "flatness", dict)
+    if flat:
+        c.finite(flat, "max_rel_dev", "flatness")
+
+
+def check_fleet(rec: Dict[str, Any], c: _Check):
+    c.require(rec, "backend", str)
+    curve = c.require(rec, "curve", list) or []
+    if not curve:
+        c.fail("curve is empty")
+    for i, row in enumerate(curve):
+        ctx = f"curve[{i}]"
+        for k in ("devices", "num_slots", "scenes_per_s", "run_s"):
+            c.finite(row, k, ctx, positive=True)
+        if "step_p50_ms" in row:        # registry-derived (newer records)
+            c.finite(row, "step_p50_ms", ctx, positive=True)
+        if row.get("bit_identical_to_single_device") is not True:
+            c.fail(f"{ctx}: sharded run not bit-identical to the "
+                   "single-device reference")
+
+
+def check_train(rec: Dict[str, Any], c: _Check):
+    for k in ("arch", "encoding"):
+        c.require(rec, k, str)
+    for k in ("steps", "batch", "n_params", "steps_per_s", "sec_per_step"):
+        c.finite(rec, k, positive=True)
+    for k in ("loss_first", "loss_last"):
+        c.finite(rec, k)
+
+
+CHECKERS = {
+    "BENCH_serve.json": check_serve,
+    "BENCH_rollout.json": check_rollout,
+    "BENCH_fleet.json": check_fleet,
+    "BENCH_train.json": check_train,
+}
+
+
+def match_checker(path: str):
+    base = os.path.basename(path)
+    for name, fn in CHECKERS.items():
+        # smoke copies like BENCH_serve_smoke.json use the same schema
+        if base.startswith(name[:-len(".json")]):
+            return fn
+    return None
+
+
+def check_file(path: str) -> List[str]:
+    c = _Check(path)
+    fn = match_checker(path)
+    if fn is None:
+        c.fail("no schema registered for this bench record")
+        return c.problems
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError) as e:
+        c.fail(f"unreadable: {e}")
+        return c.problems
+    fn(rec, c)
+    return c.problems
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv else
+             sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))))
+    if not paths:
+        print("bench_schema: no BENCH_*.json records found", file=sys.stderr)
+        return 1
+    bad = 0
+    for p in paths:
+        problems = check_file(p)
+        status = "FAIL" if problems else "ok"
+        print(f"bench_schema: {os.path.basename(p)}: {status}")
+        for msg in problems:
+            print(f"  {msg}")
+        bad += bool(problems)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:] or None))

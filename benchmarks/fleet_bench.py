@@ -75,6 +75,7 @@ def scaling_curve(report, *, arch, device_counts, n_scenes, n_samples,
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.launch.mesh import make_fleet_mesh
     from repro.nn import module as nnm
     from repro.nn.agent_sim import AgentSimModel
@@ -96,11 +97,14 @@ def scaling_curve(report, *, arch, device_counts, n_scenes, n_samples,
         # cross-pod dimension of the spec is exercised, not just "data"
         mesh = (None if d == 1 else
                 make_fleet_mesh(d, pods=2 if d % 2 == 0 else 1))
+        reg = obs.Registry()
         eng = RolloutEngine(model, params, scen,
-                            num_slots=slots_per_device * d, mesh=mesh)
+                            num_slots=slots_per_device * d, mesh=mesh,
+                            registry=reg)
         t0 = time.time()
         eng.run(scenes[:2], t_hist=t_hist, n_samples=n_samples, seed=seed)
         compile_s = time.time() - t0
+        warm_steps = reg.histogram("rollout.step.seconds").count
         t0 = time.time()
         fut = eng.run(scenes, t_hist=t_hist, n_samples=n_samples, seed=seed)
         dt = time.time() - t0
@@ -108,10 +112,16 @@ def scaling_curve(report, *, arch, device_counts, n_scenes, n_samples,
         ref = fut if ref is None else ref
         mesh_shape = "1" if mesh is None else "x".join(
             str(mesh.shape[a]) for a in ("pod", "data"))
+        step_hist = reg.histogram("rollout.step.seconds")
         row = {"devices": d, "mesh": mesh_shape,
                "num_slots": eng.num_slots,
                "scenes_per_s": n_scenes / dt, "lanes": n_scenes * n_samples,
                "run_s": dt, "compile_s": compile_s,
+               # registry-derived: per-tick p50 over both runs (the
+               # warm-up run's steps are a small, post-compile minority)
+               "step_p50_ms": 1e3 * step_hist.percentile(50),
+               "steps_timed": step_hist.count - warm_steps,
+               "cache_mib": reg.gauge("rollout.cache_bytes").value / 2 ** 20,
                "bit_identical_to_single_device": parity}
         curve.append(row)
         report(f"fleet_bench/curve/d{d}/scenes_per_s",

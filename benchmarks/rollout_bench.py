@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data import scenarios
 from repro.nn import module as nnm
 from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
@@ -176,18 +177,28 @@ def run(report, *, num_agents=16, num_steps=64, num_map=16, n_scenes=4,
            "reps": reps, "backend": jax.default_backend(), "paths": {}}
 
     def bench_engine(decode_impl, cache_dtype, ml):
+        # per-engine registry: the engine's own rollout.step spans give a
+        # per-tick latency distribution the aggregate steps/s (best-of
+        # wall over whole runs) can't — p50 lands in the record below
+        reg = obs.Registry()
         eng = RolloutEngine(model, params, scen, num_slots=lanes, max_len=ml,
-                            cache_dtype=cache_dtype, decode_impl=decode_impl)
+                            cache_dtype=cache_dtype, decode_impl=decode_impl,
+                            registry=reg)
         fut, dt = _timed(eng.run, scenes, t_hist=t_hist, n_samples=n_samples,
                          seed=seed, reps=reps)
         assert np.isfinite(fut).all()
         # eng.max_len is the length actually allocated (the engine rounds
         # up to the decode kernel's 128-row block alignment)
-        return fut, n_fut / dt, _cache_mib(eng), eng.max_len
+        return fut, n_fut / dt, _cache_mib(eng), eng.max_len, reg
+
+    def _step_p50_ms(reg):
+        return 1e3 * reg.histogram("rollout.step.seconds").percentile(50)
 
     # -- the headline comparison at the overallocated cache size ----------
-    fut_gen, sps_gen, mib_gen, alloc_len = bench_engine(None, None, max_len)
-    fut_new, sps_new, mib_new, _ = bench_engine("auto", None, max_len)
+    fut_gen, sps_gen, mib_gen, alloc_len, reg_gen = \
+        bench_engine(None, None, max_len)
+    fut_new, sps_new, mib_new, _, reg_new = bench_engine("auto", None,
+                                                         max_len)
     rec["max_len"] = alloc_len
     speedup = sps_new / sps_gen
     report(f"rollout/{encoding}/generic_cached_steps_per_s", f"{sps_gen:.2f}",
@@ -197,9 +208,11 @@ def run(report, *, num_agents=16, num_steps=64, num_map=16, n_scenes=4,
     report(f"rollout/{encoding}/decode_speedup", f"{speedup:.2f}",
            f"ragged vs generic at overalloc={overalloc}")
     rec["paths"]["generic_cached"] = {"steps_per_s": sps_gen,
-                                      "cache_mib": mib_gen}
+                                      "cache_mib": mib_gen,
+                                      "step_p50_ms": _step_p50_ms(reg_gen)}
     rec["paths"]["ragged_f32"] = {"steps_per_s": sps_new,
-                                  "cache_mib": mib_new}
+                                  "cache_mib": mib_new,
+                                  "step_p50_ms": _step_p50_ms(reg_new)}
     rec["decode_speedup"] = speedup
     # the two paths compute the same attention up to f32 summation order;
     # logits-level parity is pinned in tests/test_decode.py — here just
@@ -212,7 +225,7 @@ def run(report, *, num_agents=16, num_steps=64, num_map=16, n_scenes=4,
 
     # -- cache dtype sweep (accuracy-vs-memory table in docs/rollout.md) --
     for dtype in ("bfloat16", "int8"):
-        fut_d, sps_d, mib_d, _ = bench_engine("auto", dtype, max_len)
+        fut_d, sps_d, mib_d, _, reg_d = bench_engine("auto", dtype, max_len)
         drift = float(np.abs(fut_d - fut_new).mean())
         report(f"rollout/{encoding}/ragged_{dtype}_steps_per_s",
                f"{sps_d:.2f}", f"cache={mib_d:.1f}MiB")
@@ -220,12 +233,13 @@ def run(report, *, num_agents=16, num_steps=64, num_map=16, n_scenes=4,
                f"{drift:.4f}", "mean |pose - f32-cache pose| over rollout")
         rec["paths"][f"ragged_{dtype}"] = {
             "steps_per_s": sps_d, "cache_mib": mib_d,
-            "traj_drift_m": drift}
+            "traj_drift_m": drift,
+            "step_p50_ms": _step_p50_ms(reg_d)}
 
     # -- flatness in max_len at fixed cursor (the ragged-scan guarantee) --
     flat = {overalloc: (sps_new, alloc_len)}   # headline: already measured
     for m in sorted({1, 2, overalloc} - {overalloc}):
-        _, sps_m, _, alloc_m = bench_engine("auto", None, m * live_len)
+        _, sps_m, _, alloc_m, _ = bench_engine("auto", None, m * live_len)
         flat[m] = (sps_m, alloc_m)
     for m in sorted(flat):
         report(f"rollout/{encoding}/ragged_steps_per_s_overalloc{m}",

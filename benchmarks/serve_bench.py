@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import time
 
@@ -34,6 +35,7 @@ import jax
 import numpy as np
 
 from benchmarks.rollout_bench import build
+from repro import obs
 from repro.runtime.rollout import RolloutEngine
 from repro.runtime.sim_server import SceneRequest, SimServer, poisson_drive
 from repro.scenarios import ScenarioConfig
@@ -44,29 +46,60 @@ DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 WARM_TICKS = 2        # first ticks carry the tick + admit compilations
 
 
+def _nearest_rank(sorted_vals, q):
+    """The histogram's own rank definition on exact samples — so the
+    sketch-vs-exact comparison isolates bucketing error alone."""
+    n = len(sorted_vals)
+    return sorted_vals[max(1, math.ceil(q / 100.0 * n)) - 1]
+
+
 def _drive_one(model, params, scen, scenes, *, num_slots, rate, t_hist,
-               cache_dtype, seed):
+               cache_dtype, seed, registry):
+    """One Poisson drive; per-tick latency comes from the shared
+    ``repro.obs`` log-bucket histogram (``poisson_drive``'s return), not
+    a hand-rolled list. When ``registry`` is enabled, the sketch's
+    percentiles are cross-checked against the exact per-tick durations
+    the registry's trace spans recorded."""
     srv = SimServer(model, params, scen, num_slots=num_slots,
-                    cache_dtype=cache_dtype)
+                    cache_dtype=cache_dtype, registry=registry)
     reqs = [SceneRequest(uid=i, tensors=s, t_hist=t_hist, seed=seed,
                         scene_id=i) for i, s in enumerate(scenes)]
     t0 = time.perf_counter()
-    drive = poisson_drive(srv, reqs, rate=rate, seed=seed)
+    drive = poisson_drive(srv, reqs, rate=rate, seed=seed,
+                          warmup_ticks=WARM_TICKS)
     wall_total = time.perf_counter() - t0
-    lat = np.asarray(drive["latencies_s"])
+    hist = drive["latency"]
     assert len(srv.done) == len(scenes), "requests lost under churn"
     stats = srv.stats()
     assert stats["tick_compilations"] == 1, "tick recompiled"
     assert stats["admit_compilations"] == 1, "admission recompiled"
-    warm = lat[WARM_TICKS:] if len(lat) > WARM_TICKS else lat
+    p50, p99 = hist.percentile(50), hist.percentile(99)
+    if registry.enabled:
+        # sketch-vs-exact: every working tick landed BOTH as an exact
+        # span duration and as one sample of the registry's tick
+        # histogram (same t0/t1), so the sketch's percentiles must agree
+        # with nearest-rank on the exact durations to within its
+        # documented bucket error — no measurement skew in the loop
+        reg_hist = registry.histogram("sim_server.tick.seconds")
+        exact = sorted(e["dur"] / 1e6 for e in registry.events()
+                       if e.get("ph") == "X"
+                       and e["name"] == "sim_server.tick")
+        assert len(exact) == reg_hist.count, \
+            "span stream / histogram diverged"
+        for q in (50, 99):
+            got, want = reg_hist.percentile(q), _nearest_rank(exact, q)
+            tol = 2 * reg_hist.max_rel_error + 1e-9
+            assert abs(got / want - 1) <= tol, (
+                f"histogram p{q} {got:.6f}s vs exact {want:.6f}s: "
+                f"off by more than the sketch's {tol:.3%} bound")
     return srv, {
         "num_slots": num_slots,
         "rate_per_tick": rate,
         "ticks": int(stats["ticks"]),
         "wall_s": wall_total,
-        "scenes_per_s": len(scenes) / max(float(warm.sum()), 1e-9),
-        "tick_p50_ms": 1e3 * float(np.percentile(warm, 50)),
-        "tick_p99_ms": 1e3 * float(np.percentile(warm, 99)),
+        "scenes_per_s": len(scenes) / max(hist.sum, 1e-9),
+        "tick_p50_ms": 1e3 * p50,
+        "tick_p99_ms": 1e3 * p99,
         "slab_mib": stats["slab_mib"],
         "slab_rows": int(stats["slab_rows"]),
     }
@@ -74,7 +107,8 @@ def _drive_one(model, params, scen, scenes, *, num_slots, rate, t_hist,
 
 def run(report, *, slot_counts=(4, 8), n_scenes=16, num_map=16,
         num_agents=8, num_steps=32, rate=1.0, encoding="se2_fourier",
-        cache_dtype=None, seed=0, smoke=False, out=None):
+        cache_dtype=None, seed=0, smoke=False, out=None,
+        overhead_tol=0.03, overhead_reps=3):
     scen = ScenarioConfig(num_map=num_map, num_agents=num_agents,
                           num_steps=num_steps)
     _, model, params = build(scen, encoding=encoding)
@@ -93,15 +127,40 @@ def run(report, *, slot_counts=(4, 8), n_scenes=16, num_map=16,
     ref = eng.run(scenes, t_hist=t_hist, n_samples=1, seed=seed)
 
     for ns in slot_counts:
-        srv, row = _drive_one(model, params, scen, scenes, num_slots=ns,
+        # telemetry-off reference: same workload against obs.NULL — the
+        # zero-sync claim is a measured number, not a design note. Each
+        # mode is driven best-of-N on p50: single drives on a shared
+        # host carry hundreds of µs of scheduler/frequency noise, an
+        # order of magnitude above the ~10 µs the instruments cost
+        row_off = srv = row = reg = None
+        for _ in range(overhead_reps):
+            _, r = _drive_one(model, params, scen, scenes, num_slots=ns,
                               rate=rate, t_hist=t_hist,
-                              cache_dtype=cache_dtype, seed=seed)
+                              cache_dtype=cache_dtype, seed=seed,
+                              registry=obs.NULL)
+            if row_off is None or r["tick_p50_ms"] < row_off["tick_p50_ms"]:
+                row_off = r
+        for _ in range(overhead_reps):
+            g = obs.Registry()
+            s, r = _drive_one(model, params, scen, scenes, num_slots=ns,
+                              rate=rate, t_hist=t_hist,
+                              cache_dtype=cache_dtype, seed=seed,
+                              registry=g)
+            if row is None or r["tick_p50_ms"] < row["tick_p50_ms"]:
+                srv, row, reg = s, r, g
         got = np.stack([srv.done[i].future for i in range(n_scenes)])
         parity = bool(np.array_equal(got, ref[:, 0]))
         row["parity_vs_batch_eval"] = parity
         # what the slab saves: a no-slab design allocates one full-length
         # cache per admitted scene instead of num_slots resident ones
         row["no_slab_mib"] = row["slab_mib"] / ns * n_scenes
+        row["tick_p50_off_ms"] = row_off["tick_p50_ms"]
+        overhead = row["tick_p50_ms"] / row_off["tick_p50_ms"] - 1.0
+        row["telemetry_overhead_p50"] = overhead
+        row["queue_wait_p50_ms"] = 1e3 * reg.histogram(
+            "sim_server.queue_wait.seconds").percentile(50)
+        row["first_action_p50_ms"] = 1e3 * reg.histogram(
+            "sim_server.first_action.seconds").percentile(50)
         rec["slot_counts"][ns] = row
         report(f"serve/{encoding}/slots{ns}/scenes_per_s",
                f"{row['scenes_per_s']:.2f}",
@@ -115,6 +174,13 @@ def run(report, *, slot_counts=(4, 8), n_scenes=16, num_map=16,
                f"vs {row['no_slab_mib']:.1f} MiB unshared")
         report(f"serve/{encoding}/slots{ns}/parity_vs_batch_eval",
                int(parity), "per-scene futures bit-match RolloutEngine")
+        report(f"serve/{encoding}/slots{ns}/telemetry_overhead_p50",
+               f"{overhead:.4f}",
+               f"p50 on/off - 1; tolerance {overhead_tol:.2f}")
+        assert overhead <= overhead_tol, (
+            f"slots={ns}: telemetry added {overhead:.2%} to p50 tick "
+            f"latency (> {overhead_tol:.0%}): instruments are not cheap "
+            "enough for the hot loop")
         if smoke:
             assert row["scenes_per_s"] > 0, "no sustained throughput"
             assert np.isfinite(row["tick_p99_ms"]), "p99 not finite"
@@ -151,8 +217,12 @@ def main():
         # small enough for CI, big enough that scenes outnumber slots and
         # every slot recycles; smoke records go to /tmp so they never
         # clobber the committed BENCH_serve.json perf-trajectory record
+        # overhead tolerance is loose in smoke: two tiny drives moments
+        # apart on a shared CI runner measure scheduler noise as much as
+        # instrument cost; the 3% acceptance bound is the full run's
         run(report, slot_counts=(2, 4), n_scenes=8, num_map=8,
             num_agents=4, num_steps=12, rate=1.0, smoke=True,
+            overhead_tol=0.50, overhead_reps=1,
             out=args.out or "/tmp/BENCH_serve_smoke.json")
     else:
         run(report, slot_counts=tuple(args.slots), n_scenes=args.scenes,

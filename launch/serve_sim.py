@@ -13,10 +13,11 @@ See ``docs/serving.md`` for the slot lifecycle and isolation argument,
 """
 import argparse
 import logging
+import time
 
 import jax
-import numpy as np
 
+from repro import obs
 from repro.nn import module as nnm
 from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
 from repro.runtime.sim_server import SceneRequest, SimServer, poisson_drive
@@ -60,14 +61,27 @@ def main():
                     help="auto / flash_decode / xla / ref (default: model)")
     ap.add_argument("--drain-lag", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry-out", default=None, metavar="PATH",
+                    help="write the Chrome/Perfetto trace (spans + final "
+                         "registry snapshot) to PATH after the drive; "
+                         "render it with python -m repro.launch.obs_report")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="also dump the registry in Prometheus text "
+                         "exposition format")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the drive into "
+                         "DIR (TensorBoard/Perfetto-loadable; the "
+                         "sim_server named_scopes label the XLA ops)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     log = logging.getLogger("serve_sim")
 
+    reg = obs.Registry()
     scen, model, params = build(args)
     srv = SimServer(model, params, scen, num_slots=args.slots,
                     cache_dtype=args.cache_dtype,
-                    decode_impl=args.decode_impl, drain_lag=args.drain_lag)
+                    decode_impl=args.decode_impl, drain_lag=args.drain_lag,
+                    registry=reg)
     scenes = generate_mixed(args.seed, 0, args.scenes, scen)
     reqs = [SceneRequest(uid=i, tensors=s, t_hist=args.t_hist,
                          seed=args.seed, scene_id=i)
@@ -78,22 +92,38 @@ def main():
              len(reqs), args.slots, srv.max_len,
              args.cache_dtype or "model", args.decode_impl or "model",
              args.rate)
-    out = poisson_drive(srv, reqs, rate=args.rate, seed=args.seed)
-    lat = np.asarray(out["latencies_s"][1:] or out["latencies_s"])
-    wall = float(lat.sum()) + out["latencies_s"][0]
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
+    t0 = time.perf_counter()
+    out = poisson_drive(srv, reqs, rate=args.rate, seed=args.seed,
+                        warmup_ticks=1)
+    wall = time.perf_counter() - t0
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        log.info("jax profiler trace written under %s", args.profile_dir)
+    hist = out["latency"]                 # post-compile working ticks
     stats = srv.stats()
     assert len(srv.done) == len(reqs), "requests lost"
     log.info("drained %d/%d scenes in %d ticks, %.2fs wall "
              "(%.1f scenes/s sustained)", len(srv.done), len(reqs),
-             srv.ticks, wall, len(reqs) / wall)
+             srv.ticks, wall, len(reqs) / max(hist.sum, 1e-9))
     log.info("tick latency (post-compile): p50 %.2f ms  p99 %.2f ms",
-             1e3 * np.percentile(lat, 50), 1e3 * np.percentile(lat, 99))
+             1e3 * hist.percentile(50), 1e3 * hist.percentile(99))
     log.info("slab: %.1f MiB for %d x %d rows; peak occupancy is live "
              "rows / slab rows per tick", stats["slab_mib"],
              args.slots, srv.max_len)
     log.info("compilations: tick=%d admit=%d (must both be 1)",
              int(stats["tick_compilations"]),
              int(stats["admit_compilations"]))
+    if args.telemetry_out:
+        obs.write_chrome_trace(reg, args.telemetry_out)
+        log.info("telemetry trace: %s (load in Perfetto, or render with "
+                 "python -m repro.launch.obs_report %s)",
+                 args.telemetry_out, args.telemetry_out)
+    if args.prom_out:
+        with open(args.prom_out, "w") as f:
+            f.write(obs.prometheus_text(reg))
+        log.info("prometheus exposition: %s", args.prom_out)
 
 
 if __name__ == "__main__":

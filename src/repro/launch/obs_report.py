@@ -1,0 +1,147 @@
+"""Render a telemetry trace as terminal tables.
+
+Consumes the Chrome/Perfetto trace file the telemetry layer writes
+(``repro.obs.write_chrome_trace``, or the ``--telemetry-out`` flag on
+``launch/serve_sim.py`` / ``python -m repro.launch.train_sim``): the
+span timeline gives per-region latency percentiles, and the embedded
+``repro.registry_snapshot`` instant event gives counters (compile
+counts, NaN skips, admissions), gauges (occupancy, resident slots,
+slab bytes) and histogram aggregates — one file, both views.
+
+Run:  python -m repro.launch.obs_report /tmp/run.trace.jsonl
+      python -m repro.launch.obs_report /tmp/run.trace.jsonl --json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List
+
+from repro import obs
+
+COMPILE_SUFFIX = "_traces"      # counters counting jit trace events
+
+
+def _fmt(v: Any) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v != v:                       # NaN
+            return "-"
+        if v and (abs(v) >= 1e5 or abs(v) < 1e-3):
+            return f"{v:.3e}"
+        return f"{v:,.3f}".rstrip("0").rstrip(".")
+    return str(v)
+
+
+def _table(title: str, headers: List[str],
+           rows: List[List[Any]]) -> str:
+    if not rows:
+        return ""
+    cells = [[_fmt(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in cells))
+              for i, h in enumerate(headers)]
+    def line(cols, pad=" "):
+        return "  ".join(c.ljust(w, pad) if i == 0 else c.rjust(w, pad)
+                         for i, (c, w) in enumerate(zip(cols, widths)))
+    out = [f"== {title} ==", line(headers),
+           line(["-" * w for w in widths])]
+    out += [line(r) for r in cells]
+    return "\n".join(out) + "\n"
+
+
+def _label_str(labels: Dict[str, Any]) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+
+
+def span_rows(events: List[Dict[str, Any]]) -> List[List[Any]]:
+    """Aggregate complete ("X") events per span name through the shared
+    log-bucket histogram — the exact sketch the live registry uses."""
+    hists: Dict[str, obs.Histogram] = {}
+    for e in events:
+        if e.get("ph") == "X":
+            hists.setdefault(e["name"], obs.Histogram(e["name"])) \
+                 .record(e.get("dur", 0.0) / 1e3)        # us -> ms
+    rows = []
+    for name, h in hists.items():
+        rows.append([name, h.count, h.percentile(50), h.percentile(99),
+                     h.mean, h.sum / 1e3])
+    rows.sort(key=lambda r: -r[5])
+    return rows
+
+
+def snapshot_of(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    for e in reversed(events):
+        if e.get("name") == obs.SNAPSHOT_EVENT:
+            return e["args"]["snapshot"]
+    return {}
+
+
+def render(events: List[Dict[str, Any]]) -> str:
+    snap = snapshot_of(events)
+    parts = [_table("spans (from trace timeline)",
+                    ["span", "count", "p50_ms", "p99_ms", "mean_ms",
+                     "total_s"], span_rows(events))]
+
+    counters = snap.get("counters", [])
+    compiles = [c for c in counters if c["name"].endswith(COMPILE_SUFFIX)]
+    parts.append(_table(
+        "compilations (jit traces of resident impls)",
+        ["counter", "labels", "count"],
+        [[c["name"], _label_str(c["labels"]), c["value"]]
+         for c in compiles]))
+    parts.append(_table(
+        "counters", ["counter", "labels", "value"],
+        [[c["name"], _label_str(c["labels"]), c["value"]]
+         for c in counters if not c["name"].endswith(COMPILE_SUFFIX)]))
+    parts.append(_table(
+        "gauges (last sampled value)", ["gauge", "labels", "value"],
+        [[g["name"], _label_str(g["labels"]), g["value"]]
+         for g in snap.get("gauges", [])]))
+    ms = 1e3
+    parts.append(_table(
+        "histograms", ["histogram", "labels", "count", "p50_ms",
+                       "p90_ms", "p99_ms", "mean_ms"],
+        [[h["name"], _label_str(h["labels"]), h["count"],
+          *((None if h[q] is None else h[q] * ms)
+            for q in ("p50", "p90", "p99")),
+          None if not h["count"] or h["sum"] is None
+          else h["sum"] / h["count"] * ms]
+         for h in snap.get("histograms", [])
+         if h["name"].endswith(".seconds")]))
+
+    instants = {}
+    for e in events:
+        if e.get("ph") == "i" and e["name"] != obs.SNAPSHOT_EVENT:
+            instants[e["name"]] = instants.get(e["name"], 0) + 1
+    parts.append(_table("instant events", ["event", "count"],
+                        sorted(instants.items())))
+    if snap.get("dropped_events"):
+        parts.append(f"(trace ring dropped {snap['dropped_events']} "
+                     "oldest events)\n")
+    return "\n".join(p for p in parts if p)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Render a repro telemetry trace (spans + registry "
+                    "snapshot) as terminal tables.")
+    ap.add_argument("trace", help="trace file written by "
+                                  "repro.obs.write_chrome_trace")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the aggregates as JSON instead of tables")
+    args = ap.parse_args(argv)
+    events = obs.read_chrome_trace(args.trace)
+    if args.json:
+        print(json.dumps({
+            "spans": {r[0]: {"count": r[1], "p50_ms": r[2], "p99_ms": r[3],
+                             "mean_ms": r[4], "total_s": r[5]}
+                      for r in span_rows(events)},
+            "snapshot": snapshot_of(events)}, indent=2))
+    else:
+        print(render(events), end="")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,7 @@ import tempfile
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import SIM_ARCH_NAMES, get_sim_arch
 from repro.data.pipeline import ShardedIterator
 from repro.distributed.sharding import (derive_opt_shardings,
@@ -175,6 +176,9 @@ def train_single(args) -> dict:
     result = {
         "arch": arch.name, "encoding": arch.encoding, "status": out["status"],
         "steps": trainer.step,
+        # NaN-guard outcome in the final summary: a run that silently
+        # discarded updates must say so next to its loss numbers
+        "nan_skipped": out.get("nan_skipped", 0),
         **loss_summary(trainer.history),
         **{f"final_{k2}": v for k2, v in
            (eval_state["last"] or {}).get("open_loop", {}).items()},
@@ -267,15 +271,45 @@ def main():
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run with health assertions")
+    ap.add_argument("--telemetry-out", default=None, metavar="PATH",
+                    help="write the run's Chrome/Perfetto telemetry trace "
+                         "(trainer step/eval/checkpoint spans + registry "
+                         "snapshot) to PATH; render with "
+                         "python -m repro.launch.obs_report")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="also dump the registry in Prometheus text "
+                         "exposition format")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the whole run "
+                         "into DIR")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
     if args.smoke and args.steps == 200:
         args.steps = 40
-    if args.compare:
-        train_compare(args)
-    else:
-        train_single(args)
+    # one fresh registry as the process default: the Trainer, every
+    # rollout engine the eval hook builds, and any SimServer all land in
+    # the same timeline without threading a parameter through
+    reg = obs.Registry()
+    obs.set_registry(reg)
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
+    try:
+        if args.compare:
+            train_compare(args)
+        else:
+            train_single(args)
+    finally:
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            log.info("jax profiler trace written under %s", args.profile_dir)
+        if args.telemetry_out:
+            obs.write_chrome_trace(reg, args.telemetry_out)
+            log.info("telemetry trace: %s", args.telemetry_out)
+        if args.prom_out:
+            with open(args.prom_out, "w") as f:
+                f.write(obs.prometheus_text(reg))
+            log.info("prometheus exposition: %s", args.prom_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+"""Zero-sync telemetry: metric registry, spans, Perfetto/Prometheus export.
+
+Quick tour (full model + design rules in ``docs/observability.md``)::
+
+    from repro import obs
+
+    reg = obs.get_registry()              # process-wide default
+    reg.counter("server.admitted").inc()
+    reg.gauge("server.occupancy").set(0.73)
+    with reg.span("server.tick", phase="decode"):
+        ...                               # host wall-clock; no device sync
+    reg.histogram("server.tick.seconds").percentile(99)
+
+    obs.write_chrome_trace(reg, "run.trace.jsonl")   # load in Perfetto
+    print(obs.prometheus_text(reg))                  # /metrics payload
+
+Every runtime component (``SimServer``, ``RolloutEngine``, ``Trainer``)
+takes ``registry=``: ``None`` means the process default; ``obs.NULL``
+disables its telemetry entirely (no-op instruments — the bit-parity
+tests in ``tests/test_obs.py`` drive both paths).
+"""
+from repro.obs.export import (SNAPSHOT_EVENT, prometheus_text,
+                              read_chrome_trace, write_chrome_trace)
+from repro.obs.registry import (NULL, Counter, Gauge, Histogram, Registry,
+                                get_registry, set_registry)
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry", "NULL",
+           "get_registry", "set_registry", "write_chrome_trace",
+           "read_chrome_trace", "prometheus_text", "SNAPSHOT_EVENT"]

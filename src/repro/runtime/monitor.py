@@ -15,6 +15,8 @@ import math
 import time
 from typing import Deque, Dict, List, Optional
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class StepTimer:
@@ -49,10 +51,14 @@ class StepTimer:
 
     @property
     def median(self) -> float:
+        """Rolling median over the window — the LOWER middle for even
+        windows, matching the fleet baseline's :func:`_lower_median`: the
+        upper-middle pick made an even-window rank report a systematically
+        pessimistic median to the same :class:`StragglerPolicy` that
+        compares it against lower-median fleet baselines."""
         if not self.times:
             return float("nan")
-        s = sorted(self.times)
-        return s[len(s) // 2]
+        return _lower_median(sorted(self.times))
 
 
 def _lower_median(sorted_vals: List[float]) -> float:
@@ -70,10 +76,24 @@ def _lower_median(sorted_vals: List[float]) -> float:
 
 @dataclasses.dataclass
 class StragglerPolicy:
-    """Flags ranks whose rolling median step time is anomalously slow."""
+    """Flags ranks whose rolling median step time is anomalously slow.
+
+    ``registry``: telemetry home (``None`` = the process default,
+    ``obs.NULL`` = off). Every evaluation exports the per-rank medians /
+    sample counts it saw as ``straggler.rank_median_s`` /
+    ``straggler.rank_samples`` gauges, and a non-empty decision lands as
+    a ``straggler.flagged`` instant event — so a drain-and-replace
+    trigger is visible in the same Perfetto timeline as the step spans
+    it acted on.
+    """
 
     straggler_factor: float = 1.5
     min_samples: int = 10
+    registry: Optional[obs.Registry] = None
+
+    def _reg(self) -> obs.Registry:
+        return self.registry if self.registry is not None \
+            else obs.get_registry()
 
     def evaluate(self, medians: Dict[int, float],
                  counts: Optional[Dict[int, int]] = None) -> List[int]:
@@ -92,14 +112,27 @@ class StragglerPolicy:
         def warmed(r: int) -> bool:
             return counts is None or counts.get(r, 0) >= self.min_samples
 
+        reg = self._reg()
+        for r, v in medians.items():
+            reg.gauge("straggler.rank_median_s", rank=r).set(v)
+            if counts is not None:
+                reg.gauge("straggler.rank_samples", rank=r) \
+                   .set(counts.get(r, 0))
         eligible = {r: v for r, v in medians.items()
                     if math.isfinite(v) and warmed(r)}
         if not eligible or (counts is None
                             and len(eligible) < self.min_samples):
             return []
         fleet = _lower_median(sorted(eligible.values()))
-        return [r for r, v in eligible.items()
-                if v > self.straggler_factor * fleet]
+        flagged = [r for r, v in eligible.items()
+                   if v > self.straggler_factor * fleet]
+        if flagged:
+            reg.counter("straggler.flag_decisions").inc()
+            reg.event("straggler.flagged",
+                      ranks=",".join(str(r) for r in sorted(flagged)),
+                      fleet_median_s=fleet,
+                      factor=self.straggler_factor)
+        return flagged
 
     def evaluate_timers(self, timers: Dict[int, "StepTimer"]) -> List[int]:
         """Convenience wrapper: derive (medians, counts) from per-rank

@@ -24,6 +24,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import kinematics
 from repro.scenarios.core import ScenarioConfig
 
@@ -63,7 +64,7 @@ class RolloutEngine:
     def __init__(self, model, params, scen_cfg: ScenarioConfig,
                  *, num_slots: int, max_len: Optional[int] = None,
                  cache_dtype=None, decode_impl: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, registry: Optional[obs.Registry] = None):
         """``cache_dtype``: storage dtype of the per-layer K/V cache — a
         jnp dtype or "float32" / "bfloat16" / "int8" (int8 caches carry
         per-row scales beside K/V and are dequantized inside the decode
@@ -85,7 +86,15 @@ class RolloutEngine:
         per-scene outputs are bit-identical to the unsharded engine
         regardless of device count or slot placement
         (tests/test_distributed.py pins this on a forced CPU mesh).
+
+        ``registry``: telemetry home (``repro.obs``) — ``None`` = the
+        process default, ``obs.NULL`` = off. The engine records
+        ``rollout.prefill`` / ``rollout.step`` / ``rollout.chunk`` spans
+        (host wall-clock around the async dispatches — never a forced
+        sync) and a ``rollout.cache_bytes`` gauge from shape metadata;
+        obs-on vs obs-off runs are bit-identical (tests/test_obs.py).
         """
+        self.obs = registry if registry is not None else obs.get_registry()
         self.model = model
         self.params = params
         self.scen = scen_cfg
@@ -101,7 +110,14 @@ class RolloutEngine:
         self.decode_impl = decode_impl
         self._accel = jnp.asarray(scen_cfg.accel_values(), jnp.float32)
         self._yaw = jnp.asarray(scen_cfg.yaw_values(), jnp.float32)
-        prefill_fn = functools.partial(model.prefill, impl=decode_impl)
+        raw_prefill = functools.partial(model.prefill, impl=decode_impl)
+
+        def prefill_fn(params, cache, batch):
+            # named_scope is trace-time annotation only (shows up in XLA /
+            # --profile-dir traces); it cannot change values or shapes
+            with jax.named_scope("rollout.prefill"):
+                return raw_prefill(params, cache, batch)
+
         step_fn = self._step_impl
         self._cache_shardings = None
         if mesh is not None:
@@ -147,6 +163,10 @@ class RolloutEngine:
             # place slot-sharded from the start, so the prefill donation
             # reuses the buffers instead of resharding a replicated copy
             cache = jax.device_put(cache, self._cache_shardings)
+        # shape metadata only — no device read, no sync
+        self.obs.gauge("rollout.cache_bytes").set(
+            sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                for v in jax.tree.leaves(cache)))
         return cache
 
     def _step_impl(self, params, cache, logits, pose, speed, feats_proto,
@@ -166,6 +186,12 @@ class RolloutEngine:
         axis and plain arrays partition like any other per-lane input.
         ``wrap_key_data`` reconstructs the identical typed keys, so the
         sampled stream is unchanged."""
+        with jax.named_scope("rollout.step"):
+            return self._step_body(params, cache, logits, pose, speed,
+                                   feats_proto, valid, keys, t)
+
+    def _step_body(self, params, cache, logits, pose, speed, feats_proto,
+                   valid, keys, t):
         b, a, _ = feats_proto.shape
         keys = jax.random.wrap_key_data(keys)
         keys_t = jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, t)
@@ -194,7 +220,9 @@ class RolloutEngine:
         per-(scene, sample) key stream.
         """
         cache = self.init_cache()
-        hist_logits, cache = self._prefill(self.params, cache, hist_batch)
+        with self.obs.span("rollout.prefill"):
+            hist_logits, cache = self._prefill(self.params, cache,
+                                               hist_batch)
         logits = hist_logits[:, -1]                        # (B, A, K)
         pose = hist_batch["agent_pose"][:, -1]
         speed = hist_batch["agent_feats"][:, -1, :, 0] * 10.0
@@ -204,10 +232,14 @@ class RolloutEngine:
         valid = hist_batch["agent_valid"][:, -1]
         out, out_acts = [], []
         for t in range(t_hist, t_total):
-            cache, logits, pose, speed, acts = self._step(
-                self.params, cache, logits, pose, speed, feats_proto,
-                valid, keys, jnp.asarray(t, jnp.int32))
+            # span = host dispatch time of the async device step — the
+            # number the pipelining argument cares about; no added sync
+            with self.obs.span("rollout.step"):
+                cache, logits, pose, speed, acts = self._step(
+                    self.params, cache, logits, pose, speed, feats_proto,
+                    valid, keys, jnp.asarray(t, jnp.int32))
             self.ticks += 1
+            self.obs.counter("rollout.ticks").inc()
             out.append(pose)
             out_acts.append(acts)
         # (B, T_fut, A, 3), (B, T_fut, A)
@@ -250,9 +282,10 @@ class RolloutEngine:
             hist = {k: jnp.asarray(np.stack([lane_hist(i)[k] for i in lanes]))
                     for k in lane_hist(0)}
             keys = jnp.asarray(keys_all[np.asarray(lanes)])
-            fut, acts = self._run_chunk(hist, keys, t_hist, t_total)
-            futures.append(np.asarray(fut[:total - start]))
-            actions.append(np.asarray(acts[:total - start]))
+            with self.obs.span("rollout.chunk"):
+                fut, acts = self._run_chunk(hist, keys, t_hist, t_total)
+                futures.append(np.asarray(fut[:total - start]))
+                actions.append(np.asarray(acts[:total - start]))
         flat = np.concatenate(futures, axis=0)[:total]
         t_fut = t_total - t_hist
         a = self.scen.num_agents

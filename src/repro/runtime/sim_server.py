@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.nn.agent_sim import install_slot_rows
 from repro.runtime.rollout import step_kinematics
 from repro.scenarios.core import ScenarioConfig
@@ -113,7 +114,8 @@ class SimServer:
     def __init__(self, model, params, scen_cfg: ScenarioConfig, *,
                  num_slots: int, max_len: Optional[int] = None,
                  cache_dtype=None, decode_impl: Optional[str] = None,
-                 drain_lag: int = 1):
+                 drain_lag: int = 1,
+                 registry: Optional[obs.Registry] = None):
         """``max_len``: slab width per slot in cache rows (default: the
         config's worst case ``M + num_steps * A``; rounded up to the
         decode kernel's 128-row block like ``RolloutEngine``). A request
@@ -121,7 +123,20 @@ class SimServer:
         ticks a tick's outputs stay on device before the host
         materializes them (1 = classic double buffering; 0 = synchronous,
         for latency measurements). ``cache_dtype`` / ``decode_impl`` as
-        in ``RolloutEngine``."""
+        in ``RolloutEngine``.
+
+        ``registry``: telemetry home (``repro.obs``; ``None`` = process
+        default, ``obs.NULL`` = off). Every tick records a
+        ``sim_server.tick`` span plus occupancy / resident / queued
+        gauges from host-side bookkeeping; admissions record
+        ``sim_server.queue_wait.seconds`` (submit -> admit) and, once a
+        lane's first closed-loop action drains,
+        ``sim_server.first_action.seconds`` (admit -> first action on
+        host, pipelined drain included). All samples are host wall-clock
+        or host counters — telemetry never touches a device value, so
+        obs-on/obs-off runs are bit-identical and compile-count-identical
+        (tests/test_obs.py)."""
+        self.obs = registry if registry is not None else obs.get_registry()
         self.model = model
         self.params = params
         self.scen = scen_cfg
@@ -165,8 +180,15 @@ class SimServer:
         self.evicted = 0
         # Tracing the impl body is what a (re)compilation costs; the
         # retrace-guard test pins these at exactly 1 under slot churn.
+        # Mirrored into the registry (sim_server.tick_traces /
+        # admit_traces counters) so obs_report shows compile counts.
         self.tick_traces = 0
         self.admit_traces = 0
+        self._submit_ts: Dict[int, float] = {}      # uid -> submit wall-time
+        self.obs.gauge("sim_server.slab_rows").set(num_slots * self.max_len)
+        self.obs.gauge("sim_server.slab_bytes").set(
+            sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                for v in jax.tree.leaves(self.cache)))
         self._tick = jax.jit(self._tick_impl, donate_argnums=(1, 2))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(1, 2))
 
@@ -189,6 +211,8 @@ class SimServer:
                        for s in self.slots) \
                 or any(r.uid == req.uid for r in self.queue):
             raise ValueError(f"duplicate request uid {req.uid}")
+        self._submit_ts[req.uid] = time.perf_counter()
+        self.obs.counter("sim_server.submitted").inc()
         self.queue.append(req)
 
     def evict(self, uid: int) -> bool:
@@ -201,10 +225,14 @@ class SimServer:
                 slot.req = None
                 self._buf.pop(uid, None)
                 self.evicted += 1
+                self.obs.counter("sim_server.evicted").inc()
+                self.obs.event("sim_server.evict", uid=uid, phase="resident")
                 return True
         for r in self.queue:
             if r.uid == uid:
                 self.queue.remove(r)
+                self._submit_ts.pop(uid, None)
+                self.obs.event("sim_server.evict", uid=uid, phase="queued")
                 return True
         return False
 
@@ -213,16 +241,21 @@ class SimServer:
             if slot.req is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            now = time.perf_counter()
+            submit_ts = self._submit_ts.pop(req.uid, now)
+            self.obs.histogram("sim_server.queue_wait.seconds") \
+                .record(now - submit_ts)
             key = jax.random.fold_in(
                 jax.random.fold_in(jax.random.key(req.seed), req.scene_id),
                 req.sample_id)
             tt = req.tensors
-            self.cache, self.state = self._admit(
-                self.params, self.cache, self.state,
-                jnp.asarray(tt["map_feats"])[None],
-                jnp.asarray(tt["map_pose"])[None],
-                jnp.asarray(tt["map_valid"])[None],
-                jnp.asarray(si, jnp.int32), jax.random.key_data(key))
+            with self.obs.span("sim_server.admit"):
+                self.cache, self.state = self._admit(
+                    self.params, self.cache, self.state,
+                    jnp.asarray(tt["map_feats"])[None],
+                    jnp.asarray(tt["map_pose"])[None],
+                    jnp.asarray(tt["map_valid"])[None],
+                    jnp.asarray(si, jnp.int32), jax.random.key_data(key))
             slot.req = req
             slot.t = 0
             t_fut = req.t_total - req.t_hist
@@ -231,8 +264,10 @@ class SimServer:
                 "future": np.zeros((t_fut, a, 3), np.float32),
                 "actions": np.zeros((t_fut, a), np.int32),
                 "filled": 0, "req": req,
+                "admit_ts": time.perf_counter(),
             }
             self.admitted += 1
+            self.obs.counter("sim_server.admitted").inc()
 
     def _admit_impl(self, params, cache, state, map_feats, map_pose,
                     map_valid, si, key_data):
@@ -246,17 +281,19 @@ class SimServer:
         first teacher tick supplies the real values.
         """
         self.admit_traces += 1
-        m = map_feats.shape[1]
-        sub = self.model.init_cache(1, self._sub_len, self.cache_dtype)
-        _, sub = self.model.admit_map(params, sub, map_feats, map_pose,
-                                      map_valid, impl=self.decode_impl)
-        cache = install_slot_rows(cache, sub, si, m)
-        state = dict(state)
-        for k in ("logits", "pose", "speed", "proto", "valid"):
-            state[k] = state[k].at[si].set(
-                jnp.zeros(state[k].shape[1:], state[k].dtype))
-        state["keys"] = state["keys"].at[si].set(key_data)
-        return cache, state
+        self.obs.counter("sim_server.admit_traces").inc()
+        with jax.named_scope("sim_server.admit"):
+            m = map_feats.shape[1]
+            sub = self.model.init_cache(1, self._sub_len, self.cache_dtype)
+            _, sub = self.model.admit_map(params, sub, map_feats, map_pose,
+                                          map_valid, impl=self.decode_impl)
+            cache = install_slot_rows(cache, sub, si, m)
+            state = dict(state)
+            for k in ("logits", "pose", "speed", "proto", "valid"):
+                state[k] = state[k].at[si].set(
+                    jnp.zeros(state[k].shape[1:], state[k].dtype))
+            state["keys"] = state["keys"].at[si].set(key_data)
+            return cache, state
 
     # -- the tick -------------------------------------------------------------
 
@@ -279,6 +316,13 @@ class SimServer:
         it cannot matter).
         """
         self.tick_traces += 1
+        self.obs.counter("sim_server.tick_traces").inc()
+        with jax.named_scope("sim_server.tick"):
+            return self._tick_body(params, cache, state, tfeats, tpose,
+                                   tvalid, t, active, teacher)
+
+    def _tick_body(self, params, cache, state, tfeats, tpose, tvalid,
+                   t, active, teacher):
         logits, pose, speed = state["logits"], state["pose"], state["speed"]
         proto, valid = state["proto"], state["valid"]
         keys = jax.random.wrap_key_data(state["keys"])
@@ -320,6 +364,15 @@ class SimServer:
         queued work). The device call is dispatched asynchronously;
         outputs are materialized ``drain_lag`` ticks later.
         """
+        t0 = time.perf_counter()
+        ticked = self._tick_host()
+        # idle polls are free and would swamp the latency histogram with
+        # near-zero samples; only working ticks count as spans
+        if ticked:
+            self.obs.observe_span("sim_server.tick", t0, time.perf_counter())
+        return ticked
+
+    def _tick_host(self) -> bool:
         self._admit_pending()
         b, a = self.num_slots, self.scen.num_agents
         active = np.zeros(b, bool)
@@ -359,6 +412,17 @@ class SimServer:
             if slot.t >= slot.req.t_total:      # horizon: retire, free slot
                 slot.req = None
         self._drain(self.drain_lag)
+        if self.obs.enabled:
+            m = self.scen.num_map
+            live = sum(min(m + s.t * a, self.max_len)
+                       for s in self.slots if s.req is not None)
+            self.obs.counter("sim_server.ticks").inc()
+            self.obs.gauge("sim_server.live_rows").set(live)
+            self.obs.gauge("sim_server.occupancy").set(
+                live / float(self.num_slots * self.max_len))
+            self.obs.gauge("sim_server.resident").set(
+                sum(s.req is not None for s in self.slots))
+            self.obs.gauge("sim_server.queued").set(len(self.queue))
         return True
 
     # -- draining -------------------------------------------------------------
@@ -373,6 +437,9 @@ class SimServer:
                 buf = self._buf.get(uid)
                 if buf is None:                 # evicted mid-flight
                     continue
+                if buf["filled"] == 0:          # lane's first action landed
+                    self.obs.histogram("sim_server.first_action.seconds") \
+                        .record(time.perf_counter() - buf["admit_ts"])
                 buf["future"][fi] = pose_np[si]
                 buf["actions"][fi] = acts_np[si]
                 buf["filled"] += 1
@@ -421,21 +488,29 @@ class SimServer:
 
 
 def poisson_drive(server: SimServer, requests: Sequence[SceneRequest], *,
-                  rate: float, seed: int = 0) -> Dict[str, Any]:
+                  rate: float, seed: int = 0,
+                  warmup_ticks: int = 0) -> Dict[str, Any]:
     """Drive ``server`` with ``requests`` arriving as a Poisson process.
 
     ``rate`` is the mean arrival rate in requests per *tick* (the
     service clock): inter-arrival gaps are drawn i.i.d. exponential with
     mean ``1/rate``, so admissions interleave arbitrarily with resident
     scenes mid-prefill and mid-rollout — the schedule the invariance
-    tests randomize over. Ticks until every request has drained; returns
-    ``{"latencies_s": per-tick wall-clock seconds (device dispatch +
-    pipelined drain), "ticks": ..., "arrival_ticks": ...}``.
+    tests randomize over. Ticks until every request has drained.
+
+    Per-tick wall-clock (device dispatch + pipelined drain) lands in a
+    standalone :class:`repro.obs.Histogram` — the same log-bucket
+    sketch the telemetry registry uses, so every consumer reads
+    percentiles off one implementation instead of keeping raw lists.
+    The first ``warmup_ticks`` *working* ticks (compile + warmup) are
+    skipped. Returns ``{"latency": Histogram, "ticks": total working
+    ticks incl. warmup, "arrival_ticks": ...}``.
     """
     rng = np.random.default_rng(seed)
     t_arrive = np.cumsum(rng.exponential(1.0 / rate, len(requests)))
     pending = collections.deque(zip(t_arrive, requests))
-    latencies: List[float] = []
+    hist = obs.Histogram("poisson_drive.tick.seconds")
+    ticked_n = 0
     clock = 0.0
     while pending or server.queue or any(s.req for s in server.slots):
         while pending and pending[0][0] <= clock:
@@ -443,12 +518,14 @@ def poisson_drive(server: SimServer, requests: Sequence[SceneRequest], *,
         t0 = time.perf_counter()
         ticked = server.tick()
         if ticked:
-            latencies.append(time.perf_counter() - t0)
+            if ticked_n >= warmup_ticks:
+                hist.record(time.perf_counter() - t0)
+            ticked_n += 1
         clock += 1.0
         if not ticked and pending:        # idle gap: jump to next arrival
             clock = max(clock, pending[0][0])
     server.flush()
-    return {"latencies_s": latencies, "ticks": len(latencies),
+    return {"latency": hist, "ticks": ticked_n,
             "arrival_ticks": t_arrive.tolist()}
 
 

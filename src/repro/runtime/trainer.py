@@ -29,6 +29,7 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import ShardedIterator
 from repro.runtime.monitor import NaNGuard, StepTimer
@@ -53,7 +54,9 @@ class Trainer:
                  metrics_cb: Optional[Callable[[int, Dict], None]] = None,
                  should_stop: Optional[Callable[[], bool]] = None,
                  param_shardings=None,
-                 eval_cb: Optional[Callable[[int, Any], None]] = None):
+                 eval_cb: Optional[Callable[[int, Any], None]] = None,
+                 registry: Optional[obs.Registry] = None):
+        self.obs = registry if registry is not None else obs.get_registry()
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state
@@ -84,10 +87,11 @@ class Trainer:
         return True
 
     def _save(self):
-        self.ckpt.save(self.step,
-                       {"params": self.params, "opt_state": self.opt_state},
-                       extra={"step": self.step,
-                              "data": self.data.state_dict()})
+        with self.obs.span("trainer.checkpoint"):
+            self.ckpt.save(
+                self.step,
+                {"params": self.params, "opt_state": self.opt_state},
+                extra={"step": self.step, "data": self.data.state_dict()})
 
     # ------------------------------------------------------------------
     def run(self) -> Dict[str, Any]:
@@ -98,15 +102,22 @@ class Trainer:
                             self.step)
                 self._save()
                 self.ckpt.wait()
-                return {"status": "preempted", "step": self.step}
+                return {"status": "preempted", "step": self.step,
+                        "nan_skipped": self.nan_guard.total_skipped}
             batch = next(self.data)
             self.timer.start()
-            new_params, new_opt, metrics = self.step_fn(
-                self.params, self.opt_state, batch)
-            loss = float(metrics["loss"])
+            # the step span covers dispatch + the loss materialization the
+            # loop already pays (float(metrics["loss"]) below) — telemetry
+            # adds no sync of its own, it reads the same host float
+            with self.obs.span("trainer.step"):
+                new_params, new_opt, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
             self.timer.stop()
             verdict = self.nan_guard.check(loss)
             if verdict == "halt":
+                self.obs.event("trainer.halt", step=self.step,
+                               consecutive=self.nan_guard.consecutive)
                 self._save()
                 self.ckpt.wait()
                 raise FloatingPointError(
@@ -115,23 +126,32 @@ class Trainer:
             if verdict == "skip":
                 log.warning("non-finite loss at step %d; update skipped",
                             self.step)
+                self.obs.counter("trainer.nan_skipped").inc()
                 self.step += 1
                 continue
             self.params, self.opt_state = new_params, new_opt
             self.step += 1
             self.history.append(loss)
             if self.step % cfg.log_every == 0:
-                self.metrics_cb(self.step, {**{k: float(v) for k, v in
-                                               metrics.items()},
-                                            "sec_per_step": self.timer.median})
+                self.obs.gauge("trainer.step_time_median_s") \
+                    .set(self.timer.median)
+                self.metrics_cb(self.step, {
+                    **{k: float(v) for k, v in metrics.items()},
+                    "sec_per_step": self.timer.median,
+                    # a run that silently discarded N steps must not look
+                    # identical to a clean one (tests/test_obs.py pins it)
+                    "nan_skipped_total": self.nan_guard.total_skipped,
+                    "nan_consecutive": self.nan_guard.consecutive})
             if self.step % cfg.ckpt_every == 0:
                 self._save()
             # periodic evaluation (e.g. closed-loop rollout metrics): reads
             # params only, so it cannot perturb the bit-exact resume contract
             if (cfg.eval_every and self.eval_cb is not None
                     and self.step % cfg.eval_every == 0):
-                self.eval_cb(self.step, self.params)
+                with self.obs.span("trainer.eval"):
+                    self.eval_cb(self.step, self.params)
         self._save()
         self.ckpt.wait()
         return {"status": "done", "step": self.step,
-                "final_loss": self.history[-1] if self.history else None}
+                "final_loss": self.history[-1] if self.history else None,
+                "nan_skipped": self.nan_guard.total_skipped}

@@ -72,6 +72,22 @@ def test_evaluate_timers_derives_counts():
 # StepTimer
 # ---------------------------------------------------------------------------
 
+def test_step_timer_even_window_lower_median():
+    # even window: the LOWER middle, matching _lower_median — the upper
+    # pick reported a systematically pessimistic median to the same
+    # StragglerPolicy that builds lower-median fleet baselines
+    from repro.runtime.monitor import _lower_median
+    t = StepTimer(window=4)
+    for dt in (3.0, 1.0, 4.0, 2.0):
+        t.times.append(dt)
+    assert t.median == 2.0
+    assert t.median == _lower_median(sorted(t.times))
+    t.times.append(5.0)                  # window rolls: [1,4,2,5] -> 2.0
+    assert t.median == 2.0
+    t.times.append(6.0)                  # [4,2,5,6] -> 4.0
+    assert t.median == 4.0
+
+
 def test_step_timer_stop_without_start_is_nan():
     t = StepTimer()
     assert math.isnan(t.stop())          # no TypeError on None - float
