@@ -133,6 +133,87 @@ def scaling_curve(report, *, arch, device_counts, n_scenes, n_samples,
     return curve
 
 
+def fleet_telemetry(report, *, arch, ranks, out_dir, n_scenes, n_samples,
+                    slots_per_rank, seed=0, smoke=False):
+    """Per-rank trace aggregation demo: one registry per rank, each rank
+    rolling out its own scene shard (the per-host split of a data-
+    parallel fleet, run sequentially in this one process), merged into a
+    single Perfetto timeline by ``repro.obs.fleet.merge_traces``.
+
+    The last rank gets a deliberate per-step slowdown injected (a host
+    sleep of 3x rank 0's measured step median — a failure drill, clearly
+    not a claim about real hardware) so the whole chain fires on honest
+    wall-clock: per-rank medians -> ``StragglerPolicy`` flags the slow
+    rank on rank 0's registry -> ``obs_merge`` overlays the flag on the
+    straggler's own track in the merged trace.
+    """
+    import jax
+
+    from repro import obs
+    from repro.nn import module as nnm
+    from repro.nn.agent_sim import AgentSimModel
+    from repro.runtime.monitor import StragglerPolicy
+    from repro.runtime.rollout import RolloutEngine
+
+    scen = arch.scenario_config()
+    model = AgentSimModel(arch.agent_sim_config())
+    params = nnm.init_params(model.specs(), jax.random.key(seed))
+    scenes = [s.tensors for s in _mixed_scenes(scen, n_scenes)]
+    t_hist = max(1, scen.num_steps // 2)
+    pods = 2 if ranks % 2 == 0 and ranks > 1 else 1
+    per_pod = ranks // pods
+
+    regs, medians, counts = [], {}, {}
+    straggle_s = 0.0
+    for r in range(ranks):
+        reg = obs.Registry()
+        obs.fleet.stamp_identity(reg, rank=r, pod=r // per_pod,
+                                 data=r % per_pod, world=ranks)
+        eng = RolloutEngine(model, params, scen, num_slots=slots_per_rank,
+                            registry=reg)
+        if r == ranks - 1 and ranks > 1 and straggle_s > 0:
+            inner = eng._step
+
+            def slow_step(*a, _inner=inner, _s=straggle_s):
+                time.sleep(_s)
+                return _inner(*a)
+
+            eng._step = slow_step
+        shard = scenes[r::ranks]
+        eng.run(shard, t_hist=t_hist, n_samples=n_samples, seed=seed)
+        h = reg.histogram("rollout.step.seconds")
+        medians[r], counts[r] = h.percentile(50), h.count
+        regs.append(reg)
+        if r == 0:
+            straggle_s = 3.0 * max(medians[0], 1e-4)
+
+    policy = StragglerPolicy(straggler_factor=1.5,
+                             min_samples=min(10, min(counts.values())),
+                             registry=regs[0])
+    flagged = policy.evaluate(medians, counts)
+    report("fleet_bench/telemetry/flagged",
+           ",".join(map(str, flagged)) or "none",
+           " ".join(f"r{r}={m * 1e3:.2f}ms" for r, m in medians.items()))
+
+    paths = [obs.fleet.write_rank_trace(reg, out_dir,
+                                        process_name="fleet_bench")
+             for reg in regs]
+    merged = obs.fleet.merge_traces(
+        paths, os.path.join(out_dir, "merged.trace.jsonl"))
+    report("fleet_bench/telemetry/merged", merged["out"],
+           f"ranks={len(merged['ranks'])} events={merged['events']} "
+           f"overlays={merged['straggler_overlays']}")
+    if smoke:
+        assert flagged == [ranks - 1], (
+            f"straggler drill: expected rank {ranks - 1} flagged, "
+            f"got {flagged} (medians {medians})")
+        assert merged["straggler_overlays"] >= 1, merged
+    return {"ranks": ranks, "flagged": flagged,
+            "step_p50_ms": {str(r): 1e3 * m for r, m in medians.items()},
+            "injected_straggle_ms": 1e3 * straggle_s,
+            "per_rank_traces": paths, **merged}
+
+
 def table1(report, *, arch, devices, n_samples, slots_per_device,
            steps, batch, encodings, scenes_per_family, seed=0):
     """The invariant-vs-absolute comparison on the production fleet path."""
@@ -165,20 +246,23 @@ def table1(report, *, arch, devices, n_samples, slots_per_device,
 def run(report, *, smoke=False, devices=4, device_counts=(1, 2, 4),
         n_scenes=256, n_samples=2, slots_per_device=64, with_table1=True,
         steps=250, batch=32, encodings=TABLE1_ENCODINGS,
-        scenes_per_family=1432, seed=0, out=DEF_OUT):
+        scenes_per_family=1432, seed=0, out=DEF_OUT, telemetry_dir=None):
     import jax
     import numpy as np
 
+    if smoke:
+        # trim the curve to the forced device count before validating it,
+        # so e.g. --smoke --devices 2 runs the 1,2 prefix instead of
+        # demanding the default 4-point curve
+        device_counts = tuple(d for d in device_counts if d <= devices)
+        n_scenes, slots_per_device = 16, 4
+        steps, batch, scenes_per_family = 6, 8, 2
     if len(jax.devices()) < max(device_counts):
         raise RuntimeError(
             f"{len(jax.devices())} devices visible but the curve needs "
             f"{max(device_counts)}; set XLA_FLAGS="
             f"--xla_force_host_platform_device_count=... before jax init "
             f"(the __main__ entry point does this)")
-    if smoke:
-        device_counts = tuple(d for d in device_counts if d <= devices)
-        n_scenes, slots_per_device = 16, 4
-        steps, batch, scenes_per_family = 6, 8, 2
     arch = _fleet_arch(smoke)
     record = {
         "benchmark": "fleet_bench", "smoke": smoke,
@@ -195,6 +279,15 @@ def run(report, *, smoke=False, devices=4, device_counts=(1, 2, 4),
         report, arch=arch, device_counts=device_counts, n_scenes=n_scenes,
         n_samples=n_samples, slots_per_device=slots_per_device, seed=seed)
     record["curve_elapsed_s"] = round(time.time() - t0, 1)
+
+    if telemetry_dir:
+        t0 = time.time()
+        record["fleet_telemetry"] = fleet_telemetry(
+            report, arch=arch, ranks=devices, out_dir=telemetry_dir,
+            n_scenes=min(n_scenes, 8 if smoke else 32),
+            n_samples=n_samples, slots_per_rank=min(slots_per_device, 8),
+            seed=seed, smoke=smoke)
+        record["fleet_telemetry"]["elapsed_s"] = round(time.time() - t0, 1)
 
     if with_table1:
         t0 = time.time()
@@ -245,6 +338,11 @@ def main():
                          "(1432 x 7 families = 10024 scenes)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="also run the per-rank telemetry demo: one "
+                         "registry per rank, rank*.trace.jsonl files + a "
+                         "merged Perfetto timeline (with the straggler "
+                         "drill flagged + overlaid) under DIR")
     args = ap.parse_args()
 
     # MUST precede first jax init: jax locks the device count.
@@ -263,7 +361,8 @@ def main():
         slots_per_device=args.slots_per_device,
         with_table1=not args.no_table1, steps=args.steps, batch=args.batch,
         encodings=tuple(args.encodings.split(",")),
-        scenes_per_family=args.scenes_per_family, seed=args.seed, out=out)
+        scenes_per_family=args.scenes_per_family, seed=args.seed, out=out,
+        telemetry_dir=args.telemetry_dir)
 
 
 if __name__ == "__main__":

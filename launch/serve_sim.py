@@ -72,6 +72,11 @@ def main():
                     help="capture a jax.profiler trace of the drive into "
                          "DIR (TensorBoard/Perfetto-loadable; the "
                          "sim_server named_scopes label the XLA ops)")
+    ap.add_argument("--postmortem-out", default=None, metavar="PATH",
+                    help="dump a SimServer flight-recorder bundle (per-"
+                         "slot phase/cursor table + registry tail) to "
+                         "PATH after the drive; render with "
+                         "python -m repro.launch.obs_report --postmortem")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     log = logging.getLogger("serve_sim")
@@ -124,6 +129,9 @@ def main():
         with open(args.prom_out, "w") as f:
             f.write(obs.prometheus_text(reg))
         log.info("prometheus exposition: %s", args.prom_out)
+    if args.postmortem_out:
+        log.info("flight-recorder bundle: %s",
+                 srv.dump_postmortem(args.postmortem_out, reason="manual"))
 
 
 if __name__ == "__main__":

@@ -113,6 +113,24 @@ def make_eval_cb(model, scen, *, holdout, n_scenes_per_family: int,
     return eval_cb, state
 
 
+def _with_nan_injection(step_fn, at_step: int):
+    """Failure drill (``--inject-nan-at``): poison the *reported* loss
+    from host call ``at_step`` onward so the NaN guard trips and the
+    flight-recorder dump path runs for real. The parameter update itself
+    is untouched — this perturbs only the metric the guard reads."""
+    calls = {"n": 0}
+
+    def wrapped(params, opt_state, batch):
+        new_params, new_opt, metrics = step_fn(params, opt_state, batch)
+        if calls["n"] >= at_step:
+            metrics = dict(metrics)
+            metrics["loss"] = float("nan")
+        calls["n"] += 1
+        return new_params, new_opt, metrics
+
+    return wrapped
+
+
 def train_single(args) -> dict:
     arch = get_sim_arch(args.arch)
     if args.reduced:
@@ -141,7 +159,10 @@ def train_single(args) -> dict:
                          out_shardings=param_sh)(jax.random.key(args.seed))
         opt_state = jax.jit(opt.init, out_shardings=derive_opt_shardings(
             specs, jax.eval_shape(opt.init, params), mesh))(params)
-        step = jax.jit(make_sim_train_step(model, opt))
+        step = obs.CostAccounted(jax.jit(make_sim_train_step(model, opt)),
+                                 "train.step", labels={"arch": arch.name})
+        if args.inject_nan_at is not None:
+            step = _with_nan_injection(step, args.inject_nan_at)
 
         eval_cb, eval_state = make_eval_cb(
             model, scen, holdout=holdout,
@@ -151,6 +172,9 @@ def train_single(args) -> dict:
         # graceful preemption: SIGTERM triggers checkpoint-and-exit
         stop = {"flag": False}
         signal.signal(signal.SIGTERM, lambda *_: stop.update(flag=True))
+
+        flight = (obs.FlightRecorder(out_path=args.postmortem_out)
+                  if args.postmortem_out else None)
 
         trainer = Trainer(
             step, params, opt_state, data, ckpt_dir,
@@ -163,7 +187,8 @@ def train_single(args) -> dict:
                 m.get("accuracy", float("nan")), m["sec_per_step"]),
             should_stop=lambda: stop["flag"],
             param_shardings=param_sh,
-            eval_cb=eval_cb)
+            eval_cb=eval_cb,
+            flight=flight)
         trainer.restore_if_available()
         out = trainer.run()
         # final eval, unless the cadence already evaluated THIS step in
@@ -279,6 +304,19 @@ def main():
     ap.add_argument("--prom-out", default=None, metavar="PATH",
                     help="also dump the registry in Prometheus text "
                          "exposition format")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="write this process's trace as DIR/rankNNNNN."
+                         "trace.jsonl, stamped with its fleet identity; "
+                         "merge a fleet's worth with "
+                         "python -m repro.launch.obs_merge DIR")
+    ap.add_argument("--postmortem-out", default=None, metavar="PATH",
+                    help="arm the flight recorder: on NaN-halt or SIGTERM "
+                         "preemption, dump a postmortem bundle to PATH "
+                         "(render with obs_report --postmortem)")
+    ap.add_argument("--inject-nan-at", type=int, default=None, metavar="N",
+                    help="failure drill: report NaN losses from step N "
+                         "onward so the NaN guard halts and the flight "
+                         "recorder fires (exits nonzero by design)")
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the whole run "
                          "into DIR")
@@ -306,6 +344,11 @@ def main():
         if args.telemetry_out:
             obs.write_chrome_trace(reg, args.telemetry_out)
             log.info("telemetry trace: %s", args.telemetry_out)
+        if args.telemetry_dir:
+            obs.fleet.stamp_process_identity(reg)
+            log.info("per-rank telemetry trace: %s",
+                     obs.fleet.write_rank_trace(reg, args.telemetry_dir,
+                                                process_name="train_sim"))
         if args.prom_out:
             with open(args.prom_out, "w") as f:
                 f.write(obs.prometheus_text(reg))

@@ -19,11 +19,16 @@ takes ``registry=``: ``None`` means the process default; ``obs.NULL``
 disables its telemetry entirely (no-op instruments — the bit-parity
 tests in ``tests/test_obs.py`` drive both paths).
 """
+from repro.obs import fleet
+from repro.obs.cost import CostAccounted, compiled_cost, record_compiled_cost
 from repro.obs.export import (SNAPSHOT_EVENT, prometheus_text,
                               read_chrome_trace, write_chrome_trace)
+from repro.obs.flight import FlightRecorder
 from repro.obs.registry import (NULL, Counter, Gauge, Histogram, Registry,
                                 get_registry, set_registry)
 
 __all__ = ["Counter", "Gauge", "Histogram", "Registry", "NULL",
            "get_registry", "set_registry", "write_chrome_trace",
-           "read_chrome_trace", "prometheus_text", "SNAPSHOT_EVENT"]
+           "read_chrome_trace", "prometheus_text", "SNAPSHOT_EVENT",
+           "CostAccounted", "compiled_cost", "record_compiled_cost",
+           "FlightRecorder", "fleet"]

@@ -26,8 +26,8 @@ from typing import Any, Dict, List
 
 from repro.obs.registry import Registry
 
-__all__ = ["write_chrome_trace", "read_chrome_trace", "prometheus_text",
-           "SNAPSHOT_EVENT"]
+__all__ = ["write_chrome_trace", "write_event_array", "read_chrome_trace",
+           "prometheus_text", "SNAPSHOT_EVENT"]
 
 #: name of the instant event carrying the final registry snapshot
 SNAPSHOT_EVENT = "repro.registry_snapshot"
@@ -55,19 +55,9 @@ def _sanitize_tree(obj):
     return obj
 
 
-def write_chrome_trace(registry: Registry, path: str, *,
-                       process_name: str = "repro") -> str:
-    """Dump the registry's trace ring (+ final snapshot) as a
-    Perfetto-loadable trace file; returns ``path``."""
-    events: List[Dict[str, Any]] = [
-        {"name": "process_name", "ph": "M", "pid": registry.pid,
-         "args": {"name": process_name}},
-    ]
-    events.extend(registry.events())
-    events.append({
-        "name": SNAPSHOT_EVENT, "ph": "i", "s": "p", "pid": registry.pid,
-        "tid": registry.tid(), "ts": 0.0,
-        "args": {"snapshot": _sanitize_tree(registry.snapshot())}})
+def write_event_array(path: str, events: List[Dict[str, Any]]) -> str:
+    """Write trace events as a JSON array, one event per line (the dual
+    JSON/JSONL dialect :func:`read_chrome_trace` parses); returns ``path``."""
     with open(path, "w") as f:
         f.write("[\n")
         for i, ev in enumerate(events):
@@ -75,6 +65,26 @@ def write_chrome_trace(registry: Registry, path: str, *,
             f.write(_json_line(ev) + comma + "\n")
         f.write("]\n")
     return path
+
+
+def write_chrome_trace(registry: Registry, path: str, *,
+                       process_name: str = "repro") -> str:
+    """Dump the registry's trace ring (+ final snapshot) as a
+    Perfetto-loadable trace file; returns ``path``."""
+    identity = dict(registry.identity)
+    if "rank" in identity:
+        process_name = f"{process_name} [rank {identity['rank']}]"
+    events: List[Dict[str, Any]] = [
+        {"name": "process_name", "ph": "M", "pid": registry.pid,
+         "args": {"name": process_name,
+                  **({"identity": identity} if identity else {})}},
+    ]
+    events.extend(registry.events())
+    events.append({
+        "name": SNAPSHOT_EVENT, "ph": "i", "s": "p", "pid": registry.pid,
+        "tid": registry.tid(), "ts": 0.0,
+        "args": {"snapshot": _sanitize_tree(registry.snapshot())}})
+    return write_event_array(path, events)
 
 
 def read_chrome_trace(path: str) -> List[Dict[str, Any]]:
@@ -101,13 +111,22 @@ def _prom_name(name: str, suffix: str = "") -> str:
     return re.sub(r"[^a-zA-Z0-9_:]", "_", name) + suffix
 
 
+def _prom_escape(v: Any) -> str:
+    """Escape a label value per the text-exposition spec: backslash,
+    double-quote, and line-feed are the three characters that break the
+    ``name{k="v"} value`` line grammar."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _prom_labels(labels: Dict[str, str],
                  extra: Dict[str, str] = None) -> str:
     items = dict(labels)
     items.update(extra or {})
     if not items:
         return ""
-    body = ",".join(f'{_prom_name(k)}="{v}"' for k, v in sorted(items.items()))
+    body = ",".join(f'{_prom_name(k)}="{_prom_escape(v)}"'
+                    for k, v in sorted(items.items()))
     return "{" + body + "}"
 
 
@@ -136,6 +155,8 @@ def prometheus_text(registry: Registry) -> str:
         lines.append(f"{name}{_prom_labels(c['labels'])} "
                      f"{_prom_value(c['value'])}")
     for g in snap["gauges"]:
+        if isinstance(g["value"], float) and math.isnan(g["value"]):
+            continue    # a never-set gauge has no meaningful sample to expose
         name = _prom_name(g["name"])
         header(name, "gauge")
         lines.append(f"{name}{_prom_labels(g['labels'])} "

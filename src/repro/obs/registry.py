@@ -52,17 +52,25 @@ def _labels_key(labels: Dict[str, Any]) -> LabelsKey:
 
 
 class Counter:
-    """Monotonically increasing count (events, skips, compilations)."""
+    """Monotonically increasing count (events, skips, compilations).
 
-    __slots__ = ("name", "labels", "value")
+    Thread-safe: ``inc`` may race between the SimServer drain thread and
+    the submitting thread, so the read-modify-write is held under a
+    per-instrument lock (plain ``+=`` on a float is *not* atomic across
+    the bytecode boundary).
+    """
+
+    __slots__ = ("name", "labels", "value", "_lock")
 
     def __init__(self, name: str, labels: LabelsKey = ()):
         self.name = name
         self.labels = labels
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def inc(self, n: float = 1.0) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
     def snapshot(self) -> Dict[str, Any]:
         return {"kind": "counter", "name": self.name,
@@ -70,17 +78,22 @@ class Counter:
 
 
 class Gauge:
-    """Last-write-wins sampled value (occupancy, resident slots, bytes)."""
+    """Last-write-wins sampled value (occupancy, resident slots, bytes).
 
-    __slots__ = ("name", "labels", "value")
+    Thread-safe; last writer wins by definition, the lock just keeps the
+    float() conversion and store from interleaving with snapshots."""
+
+    __slots__ = ("name", "labels", "value", "_lock")
 
     def __init__(self, name: str, labels: LabelsKey = ()):
         self.name = name
         self.labels = labels
         self.value = float("nan")
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self.value = float(v)
+        with self._lock:
+            self.value = float(v)
 
     def snapshot(self) -> Dict[str, Any]:
         return {"kind": "gauge", "name": self.name,
@@ -107,7 +120,7 @@ class Histogram:
     """
 
     __slots__ = ("name", "labels", "buckets_per_doubling", "count", "sum",
-                 "min", "max", "zero_count", "buckets")
+                 "min", "max", "zero_count", "buckets", "_lock")
 
     def __init__(self, name: str = "", labels: LabelsKey = (),
                  buckets_per_doubling: int = 32):
@@ -120,6 +133,7 @@ class Histogram:
         self.max = float("-inf")
         self.zero_count = 0
         self.buckets: Dict[int, int] = {}
+        self._lock = threading.Lock()
 
     @property
     def max_rel_error(self) -> float:
@@ -130,17 +144,18 @@ class Histogram:
         v = float(v)
         if math.isnan(v):
             return
-        self.count += 1
-        self.sum += v
-        if v < self.min:
-            self.min = v
-        if v > self.max:
-            self.max = v
-        if v <= 0.0:
-            self.zero_count += 1
-            return
-        i = math.floor(math.log2(v) * self.buckets_per_doubling)
-        self.buckets[i] = self.buckets.get(i, 0) + 1
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+            if v <= 0.0:
+                self.zero_count += 1
+                return
+            i = math.floor(math.log2(v) * self.buckets_per_doubling)
+            self.buckets[i] = self.buckets.get(i, 0) + 1
 
     def _bucket_mid(self, i: int) -> float:
         return 2.0 ** ((i + 0.5) / self.buckets_per_doubling)
@@ -254,17 +269,36 @@ class Registry:
     hot loops may either cache the handle or re-look it up every tick
     (one dict hit). All instruments are host-side pure-python; nothing
     here ever touches a device value.
+
+    Instrument creation and the trace ring are guarded by a registry
+    lock, and each instrument locks its own mutation, so drain /
+    pipelining threads may record concurrently without lost samples.
+
+    ``identity`` carries fleet coordinates (rank / process_index / pod /
+    data, see ``repro.obs.fleet``); ``epoch`` anchors the monotonic span
+    clock (``t0``) to wall time so per-rank traces from different
+    processes can be merged onto one timeline.
     """
 
     def __init__(self, enabled: bool = True,
                  trace_capacity: int = TRACE_CAPACITY):
         self.enabled = enabled
         self.t0 = time.perf_counter()
+        self.epoch = time.time()
         self.pid = os.getpid()
+        self.identity: Dict[str, Any] = {}
         self._instruments: Dict[Tuple[str, str, LabelsKey], Any] = {}
         self._events: List[Dict[str, Any]] = []
         self._cap = trace_capacity
         self.dropped_events = 0
+        self._lock = threading.RLock()
+
+    def set_identity(self, **coords) -> "Registry":
+        """Stamp fleet coordinates (``rank=3, pod=1, data=1, ...``) into
+        this registry; they ride every snapshot and exported trace."""
+        with self._lock:
+            self.identity.update(coords)
+        return self
 
     @staticmethod
     def tid() -> int:
@@ -278,8 +312,11 @@ class Registry:
         key = (kind, name, _labels_key(labels))
         inst = self._instruments.get(key)
         if inst is None:
-            inst = cls(name, key[2])
-            self._instruments[key] = inst
+            with self._lock:
+                inst = self._instruments.get(key)
+                if inst is None:
+                    inst = cls(name, key[2])
+                    self._instruments[key] = inst
         return inst
 
     def counter(self, name: str, **labels) -> Counter:
@@ -326,15 +363,17 @@ class Registry:
             **({"args": labels} if labels else {})})
 
     def _push_event(self, ev: Dict[str, Any]) -> None:
-        if len(self._events) >= self._cap:
-            # drop the oldest half in one slice instead of per-event pops
-            drop = self._cap // 2
-            del self._events[:drop]
-            self.dropped_events += drop
-        self._events.append(ev)
+        with self._lock:
+            if len(self._events) >= self._cap:
+                # drop the oldest half in one slice instead of per-event pops
+                drop = self._cap // 2
+                del self._events[:drop]
+                self.dropped_events += drop
+            self._events.append(ev)
 
     def events(self) -> List[Dict[str, Any]]:
-        return list(self._events)
+        with self._lock:
+            return list(self._events)
 
     # -- snapshots -----------------------------------------------------------
 
@@ -344,9 +383,13 @@ class Registry:
     def snapshot(self) -> Dict[str, Any]:
         """Host-side aggregate view: every instrument's current state.
         Safe to call anywhere — reads python state only, no device sync."""
-        out: Dict[str, Any] = {"counters": [], "gauges": [], "histograms": [],
-                               "dropped_events": self.dropped_events}
-        for (kind, _, _), inst in sorted(self._instruments.items()):
+        with self._lock:
+            out: Dict[str, Any] = {
+                "counters": [], "gauges": [], "histograms": [],
+                "dropped_events": self.dropped_events,
+                "identity": dict(self.identity), "epoch": self.epoch}
+            insts = sorted(self._instruments.items())
+        for (kind, _, _), inst in insts:
             out[kind + "s"].append(inst.snapshot())
         return out
 

@@ -151,8 +151,15 @@ class RolloutEngine:
         # every tick round-trips the full preallocated K/V cache through
         # a copy, which dwarfs the attention work the decode kernel
         # saves (the cache is tens of MiB per slot batch).
-        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
-        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        # CostAccounted AOT-compiles on first call (still exactly one
+        # trace/compilation — the zero-extra-compilation guards read its
+        # _cache_size) and records compiled FLOPs/bytes as cost.* gauges.
+        self._prefill = obs.CostAccounted(
+            jax.jit(prefill_fn, donate_argnums=(1,)),
+            "rollout.prefill", registry=self.obs)
+        self._step = obs.CostAccounted(
+            jax.jit(step_fn, donate_argnums=(1,)),
+            "rollout.step", registry=self.obs)
         self.ticks = 0
         self.last_actions = None      # (S, K, T_fut, A) after each run()
 

@@ -189,8 +189,15 @@ class SimServer:
         self.obs.gauge("sim_server.slab_bytes").set(
             sum(int(np.prod(v.shape)) * v.dtype.itemsize
                 for v in jax.tree.leaves(self.cache)))
-        self._tick = jax.jit(self._tick_impl, donate_argnums=(1, 2))
-        self._admit = jax.jit(self._admit_impl, donate_argnums=(1, 2))
+        # CostAccounted AOT-compiles on first call (one trace, one
+        # compilation — the retrace guards still hold) and records the
+        # compiled FLOPs/bytes as cost.* gauges; see repro/obs/cost.py.
+        self._tick = obs.CostAccounted(
+            jax.jit(self._tick_impl, donate_argnums=(1, 2)),
+            "sim_server.tick", registry=self.obs)
+        self._admit = obs.CostAccounted(
+            jax.jit(self._admit_impl, donate_argnums=(1, 2)),
+            "sim_server.admit", registry=self.obs)
 
     # -- admission / eviction -------------------------------------------------
 
@@ -485,6 +492,41 @@ class SimServer:
             "tick_compilations": float(self.tick_traces),
             "admit_compilations": float(self.admit_traces),
         }
+
+    def postmortem_state(self) -> Dict[str, Any]:
+        """Per-slot phase/cursor/scene-id table plus queue/drain state —
+        pure host bookkeeping (no device touch), packaged for the flight
+        recorder (``repro.obs.FlightRecorder``)."""
+        m, a = self.scen.num_map, self.scen.num_agents
+        slots = []
+        for si, slot in enumerate(self.slots):
+            if slot.req is None:
+                slots.append({"slot": si, "phase": "idle"})
+                continue
+            req = slot.req
+            buf = self._buf.get(req.uid, {})
+            slots.append({
+                "slot": si, "uid": req.uid, "scene_id": req.scene_id,
+                "sample_id": req.sample_id, "t": slot.t,
+                "t_hist": req.t_hist, "t_total": req.t_total,
+                "phase": "prefill" if slot.t < req.t_hist else "rollout",
+                "cursor_rows": min(m + slot.t * a, self.max_len),
+                "filled": int(buf.get("filled", 0)),
+            })
+        return {"slots": slots,
+                "queued_uids": [r.uid for r in self.queue],
+                "done_uids": sorted(self.done),
+                "pending_drains": len(self._pending),
+                "stats": self.stats()}
+
+    def dump_postmortem(self, path: str, *, reason: str = "manual",
+                        **context) -> str:
+        """Write a flight-recorder bundle (registry tail + snapshot +
+        the per-slot table above) to ``path``; returns the path. Works
+        even with telemetry off — the slot table is always live."""
+        fr = obs.FlightRecorder(self.obs)
+        fr.add_provider("sim_server", self.postmortem_state)
+        return fr.dump(reason=reason, path=path, **context)
 
 
 def poisson_drive(server: SimServer, requests: Sequence[SceneRequest], *,

@@ -55,8 +55,13 @@ class Trainer:
                  should_stop: Optional[Callable[[], bool]] = None,
                  param_shardings=None,
                  eval_cb: Optional[Callable[[int, Any], None]] = None,
-                 registry: Optional[obs.Registry] = None):
+                 registry: Optional[obs.Registry] = None,
+                 flight: Optional[obs.FlightRecorder] = None):
         self.obs = registry if registry is not None else obs.get_registry()
+        # postmortem flight recorder: dumped on NaN-halt / preemption
+        self.flight = flight
+        if flight is not None:
+            flight.add_provider("trainer", self._flight_state)
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state
@@ -71,6 +76,15 @@ class Trainer:
         self.timer = StepTimer()
         self.nan_guard = NaNGuard(config.max_consecutive_nans)
         self.history: list = []
+
+    def _flight_state(self) -> Dict[str, Any]:
+        """Host-side trainer state for the flight recorder: the loss tail
+        and NaN accounting the postmortem view leads with."""
+        return {"step": self.step,
+                "nan_consecutive": self.nan_guard.consecutive,
+                "nan_skipped_total": self.nan_guard.total_skipped,
+                "step_time_median_s": self.timer.median,
+                "loss_tail": [float(v) for v in self.history[-20:]]}
 
     # ------------------------------------------------------------------
     def restore_if_available(self) -> bool:
@@ -100,6 +114,10 @@ class Trainer:
             if self.should_stop():
                 log.warning("preemption requested; checkpointing at step %d",
                             self.step)
+                if self.flight is not None:
+                    log.warning("flight-recorder bundle: %s",
+                                self.flight.dump(reason="preempted",
+                                                 step=self.step))
                 self._save()
                 self.ckpt.wait()
                 return {"status": "preempted", "step": self.step,
@@ -118,6 +136,10 @@ class Trainer:
             if verdict == "halt":
                 self.obs.event("trainer.halt", step=self.step,
                                consecutive=self.nan_guard.consecutive)
+                if self.flight is not None:
+                    log.error("flight-recorder bundle: %s",
+                              self.flight.dump(reason="nan_halt",
+                                               step=self.step, loss=loss))
                 self._save()
                 self.ckpt.wait()
                 raise FloatingPointError(

@@ -28,6 +28,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import SimArch
 from repro.data.pipeline import ShardedIterator
 from repro.nn import module as nnm
@@ -83,6 +84,9 @@ def train_one(arch: SimArch, *, steps: int, batch: int, lr: float = 3e-3,
         step_fn = jax.jit(make_sim_dp_train_step(model, opt, mesh,
                                                  compress=dp_compress))
         opt_state = sim_dp_state(opt, params)
+    # compiled FLOPs/bytes land as cost.* gauges labeled per encoding
+    step_fn = obs.CostAccounted(step_fn, "train.step",
+                                labels={"encoding": arch.encoding})
     data = ShardedIterator(make_batch_fn(scen), batch_size=batch, seed=seed)
     if ckpt_dir is None:
         ckpt_dir = tempfile.mkdtemp(prefix=f"simcmp_{arch.encoding}_")

@@ -1,0 +1,420 @@
+"""PR 9 observability suite: thread-safe instruments, compiled-cost
+accounting, per-rank fleet trace merging, the flight recorder, and the
+exporter/CLI robustness satellites.
+
+Complements ``tests/test_obs.py`` (which pins the zero-sync contract:
+obs-on/off bit-parity and zero extra compilations — both now running
+through the ``CostAccounted`` AOT wrappers).
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.launch import obs_merge, obs_report
+from repro.nn import module as nnm
+from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
+from repro.runtime.rollout import RolloutEngine
+from repro.runtime.sim_server import SceneRequest, SimServer
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.scenarios import ScenarioConfig
+from repro.scenarios.registry import generate_mixed
+
+SCEN = ScenarioConfig(num_map=8, num_agents=3, num_steps=6)
+T_HIST = 3
+
+
+def _model(seed=0):
+    cfg = AgentSimConfig(d_model=32, num_layers=2, num_heads=2, head_dim=12,
+                         d_ff=64, num_actions=SCEN.num_actions,
+                         encoding="se2_fourier", attn_impl="ref")
+    model = AgentSimModel(cfg)
+    return model, nnm.init_params(model.specs(), jax.random.key(seed))
+
+
+MODEL, PARAMS = _model()
+SCENES = generate_mixed(4, 0, 11, SCEN)
+
+
+# ---------------------------------------------------------------------------
+# satellite: thread-safe instruments
+# ---------------------------------------------------------------------------
+
+def test_counter_hammer_no_lost_increments():
+    reg = obs.Registry()
+    n_threads, n_inc = 8, 5000
+
+    def work():
+        for _ in range(n_inc):
+            # re-lookup every iteration: creation and mutation both race
+            reg.counter("hammer.total").inc()
+            reg.counter("hammer.labeled", t=threading.get_ident() % 4).inc()
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert reg.counter("hammer.total").value == n_threads * n_inc
+    labeled = sum(c["value"] for c in reg.snapshot()["counters"]
+                  if c["name"] == "hammer.labeled")
+    assert labeled == n_threads * n_inc
+
+
+def test_histogram_and_events_hammer():
+    reg = obs.Registry()
+    n_threads, n_rec = 6, 3000
+
+    def work(i):
+        for k in range(n_rec):
+            reg.histogram("hammer.seconds").record(1.0)
+            if k % 10 == 0:
+                reg.event("hammer.tick", worker=i)
+
+    ts = [threading.Thread(target=work, args=(i,))
+          for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    h = reg.histogram("hammer.seconds")
+    assert h.count == n_threads * n_rec
+    assert h.sum == float(n_threads * n_rec)     # 1.0 increments stay exact
+    assert sum(1 for e in reg.events()
+               if e["name"] == "hammer.tick") == n_threads * (n_rec // 10)
+
+
+# ---------------------------------------------------------------------------
+# satellite: prometheus escaping + NaN omission
+# ---------------------------------------------------------------------------
+
+def test_prometheus_label_escaping_round_trip():
+    reg = obs.Registry()
+    evil = {'backslash': 'a\\b', 'quote': 'say "hi"', 'newline': 'x\ny'}
+    for k, v in evil.items():
+        reg.counter("adversarial", which=k, value_label=v).inc(2)
+    text = obs.prometheus_text(reg)
+
+    # every sample line must parse back to the original label value;
+    # unescape tokenwise (order of str.replace passes would be ambiguous)
+    import re
+
+    def unescape(s):
+        out, i = [], 0
+        while i < len(s):
+            if s[i] == "\\" and i + 1 < len(s):
+                out.append({"n": "\n", '"': '"', "\\": "\\"}[s[i + 1]])
+                i += 2
+            else:
+                out.append(s[i])
+                i += 1
+        return "".join(out)
+
+    seen = {}
+    for m in re.finditer(r'value_label="((?:[^"\\]|\\.)*)"', text):
+        val = unescape(m.group(1))
+        seen[val] = seen.get(val, 0) + 1
+    assert set(seen) == set(evil.values()), (seen, text)
+
+
+def test_prometheus_omits_nan_gauges():
+    reg = obs.Registry()
+    reg.gauge("never_set", a="b")           # value stays NaN
+    reg.gauge("was_set").set(1.5)
+    text = obs.prometheus_text(reg)
+    assert "never_set" not in text
+    assert "was_set 1.5" in text
+    assert "NaN" not in text
+
+
+# ---------------------------------------------------------------------------
+# compiled-cost accounting
+# ---------------------------------------------------------------------------
+
+def test_cost_accounted_wrapper_basics():
+    reg = obs.Registry()
+    f = obs.CostAccounted(jax.jit(lambda a, b: a @ b + 1.0), "toy.mm",
+                          registry=reg, labels={"tier": "test"})
+    a = np.ones((4, 4), np.float32)
+    out1 = np.asarray(f(a, a))
+    out2 = np.asarray(f(a, a))
+    np.testing.assert_array_equal(out1, out2)
+    np.testing.assert_array_equal(out1, a @ a + 1.0)
+    assert f.num_compilations == 1 and f._cache_size() == 1
+    assert f.cost["flops"] > 0 and f.cost["bytes_accessed"] > 0
+    assert f.cost["compile_seconds"] > 0
+    snap = reg.snapshot()
+    got = {(g["name"], g["labels"].get("path"), g["labels"].get("tier"))
+           for g in snap["gauges"]}
+    assert ("cost.flops", "toy.mm", "test") in got
+    assert ("cost.peak_bytes", "toy.mm", "test") in got
+    [c] = [c for c in snap["counters"] if c["name"] == "cost.compilations"]
+    assert c["value"] == 1
+    assert any(e["name"] == "cost.compiled" for e in reg.events())
+
+
+def test_cost_accounted_null_registry_still_computes():
+    f = obs.CostAccounted(jax.jit(lambda x: x * 2), "toy.mul",
+                          registry=obs.NULL)
+    out = np.asarray(f(np.arange(4, dtype=np.float32)))
+    np.testing.assert_array_equal(out, np.arange(4, dtype=np.float32) * 2)
+    # analysis ran (the wrapper's own record), but nothing hit the registry
+    assert f.cost is not None and f.num_compilations == 1
+    assert not list(obs.NULL.instruments())
+
+
+def test_engine_and_server_record_cost_gauges(tmp_path):
+    reg = obs.Registry()
+    eng = RolloutEngine(MODEL, PARAMS, SCEN, num_slots=4, registry=reg)
+    eng.run(SCENES[:2], t_hist=T_HIST, n_samples=1, seed=0)
+    srv = SimServer(MODEL, PARAMS, SCEN, num_slots=2, registry=reg)
+    srv.submit(SceneRequest(uid=0, tensors=SCENES[0], t_hist=T_HIST))
+    srv.run_until_drained()
+    paths = {g["labels"]["path"] for g in reg.snapshot()["gauges"]
+             if g["name"] == "cost.flops"}
+    assert {"rollout.prefill", "rollout.step",
+            "sim_server.tick", "sim_server.admit"} <= paths
+
+    # obs_report renders the roofline table from the written trace
+    trace = tmp_path / "run.trace.jsonl"
+    obs.write_chrome_trace(reg, str(trace))
+    assert obs_report.main([str(trace)]) == 0
+    snap = obs_report.snapshot_of(obs.read_chrome_trace(str(trace)))
+    rows = obs_report.cost_rows(snap)
+    assert {r[0] for r in rows} >= paths
+    for r in rows:
+        assert r[2] is not None and r[2] > 0        # flops column
+
+
+# ---------------------------------------------------------------------------
+# fleet: identity, per-rank traces, merge
+# ---------------------------------------------------------------------------
+
+def _two_rank_traces(tmp_path):
+    regs = []
+    for r in range(2):
+        reg = obs.Registry()
+        obs.fleet.stamp_identity(reg, rank=r, pod=r, data=0, world=2)
+        t0 = time.perf_counter()
+        reg.observe_span("rollout.step", t0, t0 + 0.010 * (r + 1))
+        reg.counter("rollout.ticks").inc(5)
+        regs.append(reg)
+    regs[0].event("straggler.flagged", ranks="1", fleet_median_s=0.01,
+                  factor=1.5)
+    return [obs.fleet.write_rank_trace(reg, str(tmp_path),
+                                       process_name="test")
+            for reg in regs]
+
+
+def test_fleet_merge_tracks_overlays_snapshot(tmp_path):
+    paths = _two_rank_traces(tmp_path)
+    assert [os.path.basename(p) for p in paths] == \
+        ["rank00000.trace.jsonl", "rank00001.trace.jsonl"]
+    out = str(tmp_path / "merged.trace.jsonl")
+    summary = obs.fleet.merge_traces(paths, out)
+    assert summary["ranks"] == [0, 1]
+    assert summary["straggler_overlays"] == 1
+
+    events = obs.read_chrome_trace(out)
+    metas = [e for e in events if e.get("ph") == "M"
+             and e["name"] == "process_name"]
+    assert len(metas) == 2
+    assert {m["args"]["name"].split(" (")[0] for m in metas} \
+        == {"rank 0", "rank 1"}
+    # pid remapped to the rank; overlay lands on the flagged rank's track
+    [ov] = [e for e in events if e["name"] == "straggler.straggling"]
+    assert ov["pid"] == 1 and ov["args"]["flagged_by_rank"] == 0
+    # epoch alignment keeps every span ts non-negative
+    assert all(e["ts"] >= 0 for e in events if e.get("ph") == "X")
+    # merged snapshot: every instrument labeled with its rank
+    snap = obs_report.snapshot_of(events)
+    ranks = {c["labels"]["rank"] for c in snap["counters"]
+             if c["name"] == "rollout.ticks"}
+    assert ranks == {"0", "1"}
+    # per-rank span rows in the rendered report
+    rows = obs_report.span_rows(events)
+    assert any(r[0].startswith("rank 0") for r in rows)
+    assert any(r[0].startswith("rank 1") for r in rows)
+
+
+def test_obs_merge_cli(tmp_path, capsys):
+    _two_rank_traces(tmp_path)
+    assert obs_merge.main([str(tmp_path)]) == 0
+    assert "merged 2 rank trace(s)" in capsys.readouterr().out
+    assert os.path.exists(tmp_path / "merged.trace.jsonl")
+    assert obs_report.main([str(tmp_path / "merged.trace.jsonl")]) == 0
+
+
+def test_obs_merge_cli_rejects_bad_inputs(tmp_path, capsys):
+    bad = tmp_path / "rank00000.trace.jsonl"
+    bad.write_text("{ not json")
+    assert obs_merge.main([str(tmp_path)]) == 2
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and err.count("\n") == 1
+    assert obs_merge.main([str(tmp_path / "missing_dir_xyz")]) == 2
+
+
+def test_merge_rejects_duplicate_ranks(tmp_path):
+    reg = obs.Registry()
+    obs.fleet.stamp_identity(reg, rank=0)
+    p1 = obs.fleet.write_rank_trace(reg, str(tmp_path / "a"))
+    p2 = obs.fleet.write_rank_trace(reg, str(tmp_path / "b"))
+    with pytest.raises(obs.fleet.MergeError, match="duplicate"):
+        obs.fleet.merge_traces([p1, p2], str(tmp_path / "m.jsonl"))
+
+
+# ---------------------------------------------------------------------------
+# satellite: obs_report robustness
+# ---------------------------------------------------------------------------
+
+def _one_line_error(capsys):
+    err = capsys.readouterr().err
+    assert err.startswith("error:") and err.count("\n") == 1, err
+
+
+def test_obs_report_missing_file(capsys):
+    assert obs_report.main(["/nonexistent/x.trace.jsonl"]) == 2
+    _one_line_error(capsys)
+
+
+def test_obs_report_empty_file(tmp_path, capsys):
+    p = tmp_path / "empty.trace.jsonl"
+    p.write_text("")
+    assert obs_report.main([str(p)]) == 2
+    _one_line_error(capsys)
+
+
+def test_obs_report_garbage_file(tmp_path, capsys):
+    p = tmp_path / "garbage.trace.jsonl"
+    p.write_text("[\n{this is not json\n")
+    assert obs_report.main([str(p)]) == 2
+    _one_line_error(capsys)
+
+
+def test_obs_report_truncated_no_snapshot(tmp_path, capsys):
+    # a trace cut off mid-write: events parse, but the final snapshot
+    # event never made it out
+    reg = obs.Registry()
+    reg.observe_span("x", 0.0, 0.001)
+    full = tmp_path / "full.trace.jsonl"
+    obs.write_chrome_trace(reg, str(full))
+    lines = full.read_text().splitlines()
+    trunc = tmp_path / "trunc.trace.jsonl"
+    trunc.write_text("\n".join(lines[:-2]) + "\n")
+    assert obs_report.main([str(trunc)]) == 2
+    _one_line_error(capsys)
+
+
+def test_obs_report_postmortem_rejects_non_bundle(tmp_path, capsys):
+    p = tmp_path / "not_bundle.json"
+    p.write_text(json.dumps({"kind": "something_else"}))
+    assert obs_report.main(["--postmortem", str(p)]) == 2
+    _one_line_error(capsys)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_sim_server_dump_postmortem_mid_flight(tmp_path):
+    reg = obs.Registry()
+    srv = SimServer(MODEL, PARAMS, SCEN, num_slots=2, registry=reg)
+    for uid, sc in enumerate(SCENES[:3]):
+        srv.submit(SceneRequest(uid=uid, tensors=sc, t_hist=T_HIST))
+    for _ in range(2):
+        srv.tick()
+    path = srv.dump_postmortem(str(tmp_path / "pm.json"), reason="drill",
+                               note="mid-flight")
+    with open(path) as f:
+        b = json.load(f)
+    assert b["kind"] == "repro.flight_recorder"
+    assert b["reason"] == "drill" and b["context"]["note"] == "mid-flight"
+    slots = b["state"]["sim_server"]["slots"]
+    assert len(slots) == 2
+    busy = [s for s in slots if s["phase"] != "idle"]
+    assert busy and all("cursor_rows" in s and "scene_id" in s
+                        for s in busy)
+    assert b["state"]["sim_server"]["queued_uids"] == [2]
+    assert b["snapshot"]["counters"]      # registry rode along
+    assert b["events"]                    # trace tail rode along
+    # the bundle renders
+    assert obs_report.main(["--postmortem", path]) == 0
+
+
+def test_trainer_nan_halt_dumps_flight_bundle(tmp_path):
+    reg = obs.Registry()
+    flight = obs.FlightRecorder(reg, out_path=str(tmp_path / "pm.json"))
+
+    calls = {"n": 0}
+
+    def step_fn(params, opt_state, batch):
+        calls["n"] += 1
+        loss = float("nan") if calls["n"] > 2 else 1.0 / calls["n"]
+        return params, opt_state, {"loss": loss}
+
+    class _Data:
+        def __next__(self):
+            return {"x": np.zeros(1)}
+        def state_dict(self):
+            return {}
+        def load_state_dict(self, s):
+            pass
+        def close(self):
+            pass
+
+    tr = Trainer(step_fn, {"w": np.zeros(1)}, {}, _Data(),
+                 str(tmp_path / "ckpt"),
+                 TrainerConfig(total_steps=50, max_consecutive_nans=3),
+                 registry=reg, flight=flight)
+    with pytest.raises(FloatingPointError):
+        tr.run()
+    with open(tmp_path / "pm.json") as f:
+        b = json.load(f)
+    assert b["reason"] == "nan_halt"
+    st = b["state"]["trainer"]
+    assert st["nan_consecutive"] == 3
+    assert st["loss_tail"] == [1.0, 0.5]      # finite steps before the run
+    assert any(e["name"] == "trainer.halt" for e in b["events"])
+    assert obs_report.main(["--postmortem", str(tmp_path / "pm.json")]) == 0
+
+
+def test_trainer_preemption_dumps_flight_bundle(tmp_path):
+    reg = obs.Registry()
+    flight = obs.FlightRecorder(reg, out_path=str(tmp_path / "pm.json"))
+
+    class _Data:
+        def __next__(self):
+            return {}
+        def state_dict(self):
+            return {}
+        def load_state_dict(self, s):
+            pass
+        def close(self):
+            pass
+
+    tr = Trainer(lambda p, o, b: (p, o, {"loss": 1.0}), {"w": np.zeros(1)},
+                 {}, _Data(), str(tmp_path / "ckpt"),
+                 TrainerConfig(total_steps=50),
+                 should_stop=lambda: True, registry=reg, flight=flight)
+    out = tr.run()
+    assert out["status"] == "preempted"
+    with open(tmp_path / "pm.json") as f:
+        assert json.load(f)["reason"] == "preempted"
+
+
+def test_flight_provider_errors_do_not_kill_dump(tmp_path):
+    fr = obs.FlightRecorder(obs.Registry(),
+                            out_path=str(tmp_path / "pm.json"))
+    fr.add_provider("broken", lambda: 1 / 0)
+    fr.add_provider("fine", lambda: {"ok": True})
+    path = fr.dump(reason="drill")
+    with open(path) as f:
+        b = json.load(f)
+    assert "ZeroDivisionError" in b["state"]["broken"]["error"]
+    assert b["state"]["fine"]["ok"] is True
