@@ -128,11 +128,47 @@ def check_train(rec: Dict[str, Any], c: _Check):
         c.finite(rec, k)
 
 
+CHAOS_SCENARIOS = ("corrupt_ckpt_resume", "nan_slot_quarantine",
+                   "dead_worker", "async_save_io", "delay_tick")
+
+
+def check_chaos(rec: Dict[str, Any], c: _Check):
+    if c.require(rec, "kind", str) not in (None, "chaos_drill"):
+        c.fail(f"kind is {rec.get('kind')!r}, wanted 'chaos_drill'")
+    c.finite(rec, "wall_s", positive=True)
+    c.finite(rec, "n_scenarios", positive=True)
+    if rec.get("all_passed") is not True:
+        c.fail("all_passed is not true — the committed record must come "
+               "from a fully passing drill run")
+    scen = c.require(rec, "scenarios", dict) or {}
+    for name in CHAOS_SCENARIOS:
+        row = scen.get(name)
+        if row is None:
+            c.fail(f"scenarios.{name} missing — the drill suite shrank")
+            continue
+        if row.get("passed") is not True:
+            c.fail(f"scenarios.{name}.passed is not true")
+        c.finite(row, "wall_s", f"scenarios.{name}", positive=True)
+        c.require(row, "bundle", str, f"scenarios.{name}")
+    q = scen.get("nan_slot_quarantine") or {}
+    for dtype in ("float32", "int8"):
+        row = q.get(dtype)
+        if not isinstance(row, dict):
+            c.fail(f"scenarios.nan_slot_quarantine.{dtype} missing — "
+                   "quarantine parity must cover both cache dtypes")
+            continue
+        for k in ("healthy_bit_identical", "recycle_bit_identical"):
+            if row.get(k) is not True:
+                c.fail(f"scenarios.nan_slot_quarantine.{dtype}.{k} "
+                       "is not true")
+
+
 CHECKERS = {
     "BENCH_serve.json": check_serve,
     "BENCH_rollout.json": check_rollout,
     "BENCH_fleet.json": check_fleet,
     "BENCH_train.json": check_train,
+    "BENCH_chaos.json": check_chaos,
 }
 
 

@@ -1,4 +1,5 @@
-"""Checkpoint substrate: atomic/async/keep-k manager with elastic restore."""
-from repro.checkpoint.manager import CheckpointManager
+"""Checkpoint substrate: atomic/async/keep-k manager with verified
+(CRC32 + fallback) elastic restore."""
+from repro.checkpoint.manager import CheckpointManager, CheckpointWriteError
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointWriteError"]

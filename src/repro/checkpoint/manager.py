@@ -1,12 +1,22 @@
-"""Checkpointing: atomic, async, keep-last-k, elastic-restore.
+"""Checkpointing: atomic, async, keep-last-k, elastic-restore, verified.
 
 Orbax-free implementation on npz shards + a JSON manifest:
 
   * **atomic**  — written to ``step_<n>.tmp`` then ``os.replace``d into
-    place; a crash mid-write never corrupts the latest checkpoint.
+    place; a crash mid-write never corrupts the latest checkpoint, and
+    any ``*.tmp`` debris such a crash leaves behind is swept at startup.
   * **async**   — ``save`` snapshots the (host) arrays and hands the disk
     I/O to a background thread; the train loop only blocks if a previous
-    save is still in flight (one outstanding save, like Orbax).
+    save is still in flight (one outstanding save, like Orbax). A write
+    that fails is retried with backoff (transient IO), and a save that
+    dies anyway is **captured and re-raised** at the next ``wait()`` /
+    ``save()`` instead of evaporating in the daemon thread.
+  * **verified** — the manifest carries a CRC32 per stored array;
+    ``verify`` recomputes them (plus structural checks) and ``restore``
+    with ``fallback=True`` walks back to the newest checkpoint that
+    passes, reporting every step it skipped and why. A truncated or
+    bit-rotted latest checkpoint costs ``ckpt_every`` steps of rework,
+    not the run.
   * **elastic** — arrays are stored unsharded (gathered); ``restore`` takes
     an optional sharding tree and puts each leaf onto the *current* mesh,
     so restoring onto a different topology (scale up/down) just works.
@@ -15,18 +25,31 @@ Orbax-free implementation on npz shards + a JSON manifest:
     in ``_to_host`` / ``_from_host``.
   * **self-describing** — the manifest stores the flattened key paths, so
     restore validates structure and reports missing/unexpected keys.
+
+The failure drills for all of this live in ``repro.chaos`` +
+``python -m repro.launch.chaos``; ``docs/robustness.md`` states the
+contracts.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CheckpointWriteError(IOError):
+    """An async save failed after its bounded retries; re-raised on the
+    training thread at the next ``wait()`` or ``save()``."""
 
 
 def _flatten(tree, path=()):
@@ -71,82 +94,260 @@ def _unflatten(flat: Dict[str, Any]):
     return fix(root)
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 *, save_retries: int = 2, retry_backoff: float = 0.05,
+                 io_hook: Optional[Callable[[int, int], None]] = None):
+        """``save_retries``: extra write attempts after a failed one
+        (``OSError``), with exponential backoff ``retry_backoff * 2**i``
+        seconds between attempts. ``io_hook(step, attempt)``: called at
+        the start of every write attempt — the fault-injection seam
+        (``repro.chaos.checkpoint_io_hook``); an exception it raises is
+        indistinguishable from a real IO failure."""
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
+        self.save_retries = int(save_retries)
+        self.retry_backoff = float(retry_backoff)
+        self.io_hook = io_hook
         os.makedirs(directory, exist_ok=True)
         self._pending: Optional[threading.Thread] = None
+        self._save_error: Optional[BaseException] = None
+        #: filled by every ``restore(fallback=True)``: the step restored
+        #: plus the corrupt steps walked over, each with its reason
+        self.last_restore_report: Dict[str, Any] = {}
+        self._cleanup_stale_tmp()
 
     # ------------------------------------------------------------------
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:010d}")
 
-    def latest_step(self) -> Optional[int]:
+    def _cleanup_stale_tmp(self):
+        """Sweep ``*.tmp`` debris left by a writer that died mid-save (or
+        mid-GC). Their content is by construction incomplete — the final
+        rename never ran — so deleting them can only reclaim space."""
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                path = os.path.join(self.directory, name)
+                log.warning("removing stale checkpoint temp %s", path)
+                if os.path.isdir(path):
+                    shutil.rmtree(path, ignore_errors=True)
+                else:
+                    try:
+                        os.remove(path)
+                    except OSError:
+                        pass
+
+    def available_steps(self) -> List[int]:
+        """Steps with a manifest-complete directory, ascending (no
+        content verification — see :meth:`verify`)."""
         steps = []
         for name in os.listdir(self.directory):
             if name.startswith("step_") and not name.endswith(".tmp"):
                 manifest = os.path.join(self.directory, name, "manifest.json")
                 if os.path.exists(manifest):
                     steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
         return max(steps) if steps else None
 
+    def _candidate_steps(self) -> List[int]:
+        """Every non-tmp step directory, even manifest-less ones — the
+        fallback walk must *report* a checkpoint whose manifest was lost,
+        not pretend the step never existed."""
+        steps = set()
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and os.path.isdir(os.path.join(self.directory, name)):
+                try:
+                    steps.add(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
     def wait(self):
+        """Block until the in-flight save lands — and surface its error
+        if it died: a checkpoint the caller believes exists but doesn't
+        is exactly the silent failure mode this layer exists to kill."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._save_error is not None:
+            err, self._save_error = self._save_error, None
+            raise CheckpointWriteError(
+                f"async checkpoint save failed after "
+                f"{self.save_retries + 1} attempts: {err}") from err
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree, extra: Optional[Dict[str, Any]] = None):
-        """Snapshot to host memory now, write to disk (a)synchronously."""
+        """Snapshot to host memory now, write to disk (a)synchronously.
+
+        Raises a :class:`CheckpointWriteError` from the *previous* save
+        if that one failed (via the ``wait()`` below) — an async
+        failure is surfaced one save late at worst, never swallowed.
+        """
         flat = _flatten(tree)
         host = {k: np.asarray(v) for k, v in flat.items()}
+        crcs = {k: _crc(v) for k, v in host.items()}
         self.wait()
 
         def write():
-            tmp = self._step_dir(step) + ".tmp"
-            final = self._step_dir(step)
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"), **host)
-            manifest = {
-                "step": step,
-                "keys": sorted(host),
-                "time": time.time(),
-                "extra": extra or {},
-            }
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._gc()
+            last: Optional[BaseException] = None
+            for attempt in range(self.save_retries + 1):
+                try:
+                    self._write_once(step, host, crcs, extra, attempt)
+                    return
+                except OSError as e:
+                    last = e
+                    log.warning(
+                        "checkpoint save step %d attempt %d/%d failed: %s",
+                        step, attempt + 1, self.save_retries + 1, e)
+                    if attempt < self.save_retries:
+                        time.sleep(self.retry_backoff * (2 ** attempt))
+                except BaseException as e:   # non-IO: don't retry
+                    last = e
+                    break
+            self._save_error = last
 
         if self.async_save:
             self._pending = threading.Thread(target=write, daemon=True)
             self._pending.start()
         else:
             write()
+            self.wait()
+
+    def _write_once(self, step: int, host: Dict[str, np.ndarray],
+                    crcs: Dict[str, int], extra: Optional[Dict[str, Any]],
+                    attempt: int):
+        tmp = self._step_dir(step) + ".tmp"
+        final = self._step_dir(step)
+        if self.io_hook is not None:
+            self.io_hook(step, attempt)
+        if os.path.exists(tmp):             # debris from a failed attempt
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "keys": sorted(host),
+            "crc32": crcs,
+            "time": time.time(),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            # Re-saving an existing step: never rmtree the live dir and
+            # then replace — between those two a concurrent reader sees
+            # the step half-deleted or vanished, and if anything
+            # re-creates ``final`` the replace dies on ENOTEMPTY.
+            # Rename the old dir aside (atomic; readers keep a coherent
+            # old view), swing the new one in, then delete the orphan.
+            old = final + ".old.tmp"
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.replace(final, old)
+            os.replace(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.replace(tmp, final)
+        self._gc()
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp")
-            and os.path.exists(os.path.join(self.directory, n,
-                                            "manifest.json")))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        for s in self.available_steps()[:-self.keep]:
+            # rename-then-delete: a reader listing the directory never
+            # sees a manifest-complete step dir with half its arrays
+            # already unlinked (.tmp names are invisible to readers)
+            live = self._step_dir(s)
+            trash = live + ".gc.tmp"
+            try:
+                os.replace(live, trash)
+            except OSError:
+                continue
+            shutil.rmtree(trash, ignore_errors=True)
 
     # ------------------------------------------------------------------
+    def verify(self, step: int) -> Optional[str]:
+        """Integrity-check one checkpoint; returns None if it passes or
+        a one-line reason: manifest missing/unreadable, arrays.npz
+        missing/truncated/unreadable, key mismatch, or a per-array CRC32
+        mismatch. Pre-CRC (legacy) manifests pass on the structural
+        checks alone."""
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            return f"manifest missing/unreadable: {e}"
+        crcs = manifest.get("crc32")
+        try:
+            with np.load(os.path.join(d, "arrays.npz")) as z:
+                if sorted(z.files) != manifest.get("keys"):
+                    return "key mismatch between manifest and arrays.npz"
+                for k in z.files:
+                    arr = z[k]          # full decompress: torn files fail here
+                    if crcs is not None and _crc(arr) != crcs.get(k):
+                        return f"crc32 mismatch on array {k!r}"
+        except Exception as e:  # noqa: BLE001 — any load failure is corrupt
+            return f"arrays.npz unreadable: {type(e).__name__}: {e}"
+        return None
+
     def restore(self, step: Optional[int] = None, shardings=None,
-                strict: bool = True):
+                strict: bool = True, fallback: bool = False):
         """Returns (tree, extra). ``shardings``: optional matching tree of
         NamedShardings — leaves are device_put onto the current mesh
-        (elastic restore)."""
+        (elastic restore).
+
+        ``fallback=True`` (with ``step=None``): instead of trusting the
+        newest directory, walk newest -> oldest and restore the first
+        checkpoint that passes :meth:`verify`; every corrupt step walked
+        over is logged and recorded in :attr:`last_restore_report` as
+        ``{"step": restored, "skipped": [{"step", "reason"}, ...]}``.
+        Raises ``IOError`` only when *no* checkpoint verifies. With an
+        explicit ``step``, corruption raises (the caller asked for that
+        exact payload)."""
         if step is None:
+            if fallback:
+                return self._restore_fallback(shardings, strict)
             step = self.latest_step()
         if step is None:
             return None, None
+        if strict:
+            reason = self.verify(step)
+            if reason is not None:
+                raise IOError(
+                    f"checkpoint {self._step_dir(step)} corrupt: {reason}")
+        return self._load(step, shardings, strict)
+
+    def _restore_fallback(self, shardings, strict: bool):
+        skipped: List[Dict[str, Any]] = []
+        for step in reversed(self._candidate_steps()):
+            reason = self.verify(step)
+            if reason is None:
+                self.last_restore_report = {"step": step, "skipped": skipped}
+                for s in skipped:
+                    log.warning(
+                        "checkpoint step %d failed verification (%s); "
+                        "fell back past it", s["step"], s["reason"])
+                if skipped:
+                    log.warning("restoring from fallback step %d", step)
+                return self._load(step, shardings, strict)
+            skipped.append({"step": step, "reason": reason})
+        if skipped:
+            raise IOError(
+                "no checkpoint passed verification; tried "
+                + "; ".join(f"step {s['step']}: {s['reason']}"
+                            for s in skipped))
+        self.last_restore_report = {"step": None, "skipped": []}
+        return None, None
+
+    def _load(self, step: int, shardings, strict: bool):
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -160,7 +361,8 @@ class CheckpointManager:
             flat_t = _flatten(tree)
             if strict and set(flat_s) != set(flat_t):
                 missing = set(flat_s) ^ set(flat_t)
-                raise IOError(f"structure mismatch on restore: {sorted(missing)[:5]}")
+                raise IOError(f"structure mismatch on restore: "
+                              f"{sorted(missing)[:5]}")
             put = {k: jax.device_put(flat_t[k], flat_s[k]) for k in flat_t}
             tree = _unflatten(put)
         return tree, manifest.get("extra", {})

@@ -183,6 +183,11 @@ def _decode_kernel(kvl_ref, *refs, scale: float, block_k: int,
                                   ks[None, :] >= 0)
             mask = jnp.logical_and(mask, seg)
         s = jnp.where(mask, s, _NEG_INF)
+        # zero unreachable rows' VALUES too, not just their weights:
+        # 0 * NaN is NaN, and rows beyond the cursor may carry any bit
+        # pattern (a quarantined predecessor's NaN rows included). For
+        # finite stale rows this is an exact no-op (0 * finite == 0).
+        v = jnp.where(jnp.any(mask, axis=0)[:, None], v, 0.0)
 
         m_prev = m_s[:, 0]
         l_prev = l_s[:, 0]
@@ -560,6 +565,11 @@ def decode_ragged_xla(q, k, v, kv_length, *,
                 & (cs[:, None, None, :] >= 0)
             mask = mask & seg
         s = jnp.where(mask, s, _NEG_INF)
+        # zero unreachable rows' values too, not just their weights:
+        # 0 * NaN is NaN, and rows beyond the cursor may carry any bit
+        # pattern (a quarantined predecessor's NaN rows included). For
+        # finite stale rows this is an exact no-op (0 * finite == 0).
+        vc = jnp.where(mask.any(axis=(1, 2))[:, None, :, None], vc, 0.0)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)

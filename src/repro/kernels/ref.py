@@ -139,6 +139,13 @@ def mha_reference(q, k, v, *, causal: bool = False,
     # fully-masked rows produce uniform p over -inf logits -> force zeros
     any_valid = mask.any(axis=-1, keepdims=True)
     p = jnp.where(any_valid, p, 0.0)
+    # a key row no query can reach gets weight 0 — but 0 * NaN is NaN, so
+    # an unreachable row's VALUE must be zeroed too, or its bit pattern
+    # (e.g. a NaN-poisoned predecessor's stale cache rows) leaks through
+    # the weighted sum. Reachable rows are written rows; for finite
+    # values the zeroing is exact (0 * finite == 0) so outputs are
+    # bit-identical. tests/test_chaos.py pins the NaN case.
+    v = jnp.where(mask.any(axis=2)[..., None], v, jnp.zeros((), v.dtype))
     return jnp.einsum("bhnm,bhmd->bhnd", p, v.astype(jnp.float32)).astype(v.dtype)
 
 
@@ -282,6 +289,11 @@ def mha_chunked(q, k, v, *, causal: bool = False,
                     + start) < kvl[:, None]
             mask = mask & live[:, None, None, :]
         s = jnp.where(mask, s, _NEG_INF)
+        # zero unreachable rows' values, not just their weights: 0 * NaN
+        # is NaN, and stale cache rows may carry any bit pattern (see
+        # mha_reference; exact no-op for finite stale rows)
+        vc = jnp.where(mask.any(axis=2)[:, :, :, None], vc,
+                       jnp.zeros((), vc.dtype))
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])

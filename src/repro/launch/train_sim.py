@@ -189,7 +189,7 @@ def train_single(args) -> dict:
             param_shardings=param_sh,
             eval_cb=eval_cb,
             flight=flight)
-        trainer.restore_if_available()
+        trainer.restore_if_available(force=args.force)
         out = trainer.run()
         # final eval, unless the cadence already evaluated THIS step in
         # this process (a restored already-complete run, or a NaN-skipped
@@ -294,6 +294,11 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write --compare results to this JSON path")
     ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="resume even from a checkpoint tagged with a "
+                         "halt_reason (e.g. a NaN-halt save); without it "
+                         "the trainer refuses to blindly replay the same "
+                         "divergence")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run with health assertions")
     ap.add_argument("--telemetry-out", default=None, metavar="PATH",

@@ -41,6 +41,20 @@ exactly one compilation. The moving parts:
   work; per-tick outputs (poses, action ids) are kept as device handles
   on a drain queue and materialized ``drain_lag`` ticks later, so tick
   t+1 is enqueued while tick t's metrics drain.
+
+* **Per-slot health / quarantine.** The drain already materializes
+  every lane's poses and action ids on the host; a numerically poisoned
+  lane (NaN state — a bad scene, a kernel bug, a flipped bit) is caught
+  there by a cheap non-finite / action-range check and **quarantined**:
+  the lane's ``SimResult`` is delivered immediately with
+  ``status="failed"`` + a reason, its slot is scrubbed back to the
+  fresh-cache invariant and freed, and ``sim_server.quarantined`` /
+  a ``sim_server.quarantine`` event record it. Healthy co-resident
+  slots keep serving BIT-identical outputs to a fault-free run — slots
+  only ever read their own slab rows, and every kernel applies masks
+  with ``jnp.where`` after the score computation, so even non-finite
+  stale rows cannot leak (drilled by ``repro.launch.chaos`` and pinned
+  in ``tests/test_chaos.py``).
 """
 from __future__ import annotations
 
@@ -100,6 +114,12 @@ class SimResult:
     t_total: int
     future: np.ndarray        # (t_total - t_hist, A, 3) sampled poses
     actions: np.ndarray       # (t_total - t_hist, A) sampled action ids
+    # slot-health outcome: "ok", or "failed" when the lane was
+    # quarantined (non-finite poses / out-of-range actions) — the
+    # partial future/actions up to the failure are preserved for
+    # debugging, zero-filled beyond it
+    status: str = "ok"
+    reason: str = ""
 
 
 @dataclasses.dataclass
@@ -178,6 +198,8 @@ class SimServer:
         self.ticks = 0
         self.admitted = 0
         self.evicted = 0
+        self.quarantined = 0
+        self._num_actions = int(model.cfg.num_actions)
         # Tracing the impl body is what a (re)compilation costs; the
         # retrace-guard test pins these at exactly 1 under slot churn.
         # Mirrored into the registry (sim_server.tick_traces /
@@ -432,10 +454,71 @@ class SimServer:
             self.obs.gauge("sim_server.queued").set(len(self.queue))
         return True
 
+    # -- slot health / quarantine ---------------------------------------------
+
+    def _health_reason(self, acts_row: np.ndarray,
+                       pose_row: np.ndarray) -> Optional[str]:
+        """Cheap host-side check on outputs the drain already
+        materialized (no extra device touch): a numerically poisoned
+        lane shows up as non-finite poses (NaN state propagates through
+        the kinematic integration) or action ids outside the model's
+        action space (categorical over non-finite logits)."""
+        if not np.isfinite(pose_row).all():
+            return "nonfinite_pose"
+        if acts_row.min() < 0 or acts_row.max() >= self._num_actions:
+            return "action_out_of_range"
+        return None
+
+    def _scrub_slot(self, si: int):
+        """Reset slot ``si``'s slab rows and carried state to the fresh-
+        cache values. Stale rows are unreachable even when non-finite
+        (every kernel applies its mask with ``jnp.where`` AFTER the
+        score computation, so a NaN score at a masked position is
+        replaced, never propagated) — the scrub is defense in depth: it
+        restores the fresh-cache invariant for the next tenant and stops
+        the quarantined slot's frozen NaN state from writing more
+        non-finite rows on subsequent (inactive, discarded) ticks."""
+        cache = dict(self.cache)
+        for k in ("k", "v", "k_scale", "v_scale"):
+            if k in cache:
+                cache[k] = cache[k].at[:, si].set(0)
+        cache["times"] = cache["times"].at[si].set(0)
+        cache["seg"] = cache["seg"].at[si].set(-1)
+        cache["cursor"] = cache["cursor"].at[si].set(0)
+        self.cache = cache
+        state = dict(self.state)
+        for k in ("logits", "pose", "speed", "proto"):
+            state[k] = state[k].at[si].set(0)
+        state["valid"] = state["valid"].at[si].set(False)
+        self.state = state
+
+    def _quarantine(self, si: int, uid: int, reason: str):
+        """Evict a poisoned lane: its result is delivered immediately as
+        ``failed`` (partial outputs preserved), its slot is scrubbed and
+        freed for the next admission, and the event is counted — healthy
+        slots are untouched and stay bit-identical to a fault-free run
+        (pinned by tests/test_chaos.py)."""
+        buf = self._buf.pop(uid, None)
+        if buf is not None:
+            req = buf["req"]
+            self.done[uid] = SimResult(
+                uid=uid, t_hist=req.t_hist, t_total=req.t_total,
+                future=buf["future"], actions=buf["actions"],
+                status="failed", reason=reason)
+        slot = self.slots[si]
+        if slot.req is not None and slot.req.uid == uid:
+            slot.req = None
+            self._scrub_slot(si)
+        self.quarantined += 1
+        self.obs.counter("sim_server.quarantined").inc()
+        self.obs.event("sim_server.quarantine", uid=uid, slot=si,
+                       reason=reason)
+
     # -- draining -------------------------------------------------------------
 
     def _drain(self, keep: int):
-        """Materialize all but the newest ``keep`` ticks' outputs."""
+        """Materialize all but the newest ``keep`` ticks' outputs,
+        health-checking every routed lane on the way."""
         while len(self._pending) > keep:
             routes, acts_dev, pose_dev = self._pending.popleft()
             acts_np = np.asarray(acts_dev)
@@ -443,6 +526,10 @@ class SimServer:
             for si, uid, fi in routes:
                 buf = self._buf.get(uid)
                 if buf is None:                 # evicted mid-flight
+                    continue
+                reason = self._health_reason(acts_np[si], pose_np[si])
+                if reason is not None:
+                    self._quarantine(si, uid, reason)
                     continue
                 if buf["filled"] == 0:          # lane's first action landed
                     self.obs.histogram("sim_server.first_action.seconds") \
@@ -489,6 +576,7 @@ class SimServer:
             "ticks": float(self.ticks),
             "admitted": float(self.admitted),
             "evicted": float(self.evicted),
+            "quarantined": float(self.quarantined),
             "tick_compilations": float(self.tick_traces),
             "admit_compilations": float(self.admit_traces),
         }
@@ -593,6 +681,12 @@ def serve_scenes(server: SimServer, scenes: Sequence, *, t_hist: int,
             lanes.append(uid)
     done = server.run_until_drained()
     assert len(done) - base == len(lanes)
+    failed = [uid for uid in lanes if done[uid].status != "ok"]
+    if failed:
+        raise RuntimeError(
+            f"serve_scenes: lanes {failed} were quarantined "
+            f"({', '.join(sorted({done[u].reason for u in failed}))}); "
+            "the stacked futures would silently contain failed lanes")
     fut = np.stack([done[uid].future for uid in lanes])
     t_fut = fut.shape[1]
     return fut.reshape(len(scenes), n_samples, t_fut,

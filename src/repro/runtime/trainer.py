@@ -4,10 +4,16 @@ The loop composes the substrates into the production shape:
 
   restore-or-init -> [data.next -> step -> monitors -> periodic ckpt] -> final ckpt
 
-Fault-tolerance contract (exercised by tests/test_trainer.py):
+Fault-tolerance contract (exercised by tests/test_trainer_server.py and
+tests/test_chaos.py, drilled end-to-end by ``repro.launch.chaos``):
   * **checkpoint/restart**: every ``ckpt_every`` steps the trainer saves
     (params, opt_state, data cursor, step). A killed-and-relaunched run
     resumes bit-exactly (same data order, same params trajectory).
+  * **verified restore with fallback**: restore walks back past corrupt
+    (truncated / bit-rotted / torn) checkpoints to the newest one whose
+    CRC32 manifest verifies, instead of crashing on the latest; a
+    NaN-halt checkpoint is tagged ``halt_reason`` and refuses a blind
+    resume without ``force``.
   * **NaN guard**: non-finite losses skip the update (the step's params are
     discarded); a run of them halts with a clear error instead of training
     garbage for hours.
@@ -87,25 +93,55 @@ class Trainer:
                 "loss_tail": [float(v) for v in self.history[-20:]]}
 
     # ------------------------------------------------------------------
-    def restore_if_available(self) -> bool:
-        latest = self.ckpt.latest_step()
-        if latest is None:
+    def restore_if_available(self, force: bool = False) -> bool:
+        """Restore from the newest checkpoint that passes integrity
+        verification (CRC32 + structure) — a corrupt/truncated latest
+        checkpoint costs ``ckpt_every`` steps of replay, not the run;
+        every step walked over is logged with its reason and counted in
+        ``trainer.ckpt_fallback`` / surfaced as a ``trainer.ckpt_skipped``
+        event.
+
+        A checkpoint tagged ``halt_reason`` (saved by a NaN-halt) is
+        refused without ``force=True``: blindly resuming from the exact
+        params + data cursor that just diverged reproduces the same
+        divergence — the operator must acknowledge (``--force`` on the
+        launcher) after changing something."""
+        tree, extra = self.ckpt.restore(fallback=True)
+        if tree is None:
             return False
-        tree, extra = self.ckpt.restore(latest)
+        report = self.ckpt.last_restore_report
+        for s in report.get("skipped", ()):
+            self.obs.counter("trainer.ckpt_fallback").inc()
+            self.obs.event("trainer.ckpt_skipped", step=s["step"],
+                           reason=s["reason"])
+        halt_reason = (extra or {}).get("halt_reason")
+        if halt_reason and not force:
+            raise RuntimeError(
+                f"checkpoint at step {int(extra['step'])} was saved by a "
+                f"'{halt_reason}' halt; resuming it replays the same "
+                f"divergence (same params, same data cursor). Pass "
+                f"force=True (launcher: --force) to resume anyway.")
         self.params = tree["params"] if self.param_shardings is None else \
             jax.tree.map(jax.device_put, tree["params"], self.param_shardings)
         self.opt_state = tree["opt_state"]
         self.step = int(extra["step"])
         self.data.load_state_dict(extra["data"])
-        log.info("restored from step %d", self.step)
+        log.info("restored from step %d%s", self.step,
+                 f" (skipped {len(report['skipped'])} corrupt checkpoint(s))"
+                 if report.get("skipped") else "")
         return True
 
-    def _save(self):
+    def _save(self, halt_reason: Optional[str] = None):
+        extra = {"step": self.step, "data": self.data.state_dict()}
+        if halt_reason is not None:
+            # tag the checkpoint with why the run died so a relaunch can
+            # refuse to blindly resume into the same divergence
+            extra["halt_reason"] = halt_reason
         with self.obs.span("trainer.checkpoint"):
             self.ckpt.save(
                 self.step,
                 {"params": self.params, "opt_state": self.opt_state},
-                extra={"step": self.step, "data": self.data.state_dict()})
+                extra=extra)
 
     # ------------------------------------------------------------------
     def run(self) -> Dict[str, Any]:
@@ -140,7 +176,7 @@ class Trainer:
                     log.error("flight-recorder bundle: %s",
                               self.flight.dump(reason="nan_halt",
                                                step=self.step, loss=loss))
-                self._save()
+                self._save(halt_reason="nan")
                 self.ckpt.wait()
                 raise FloatingPointError(
                     f"{self.nan_guard.consecutive} consecutive non-finite "

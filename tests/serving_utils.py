@@ -25,8 +25,12 @@ def scribble_stale_rows(cache, cursors, max_len: int, seed: int = 0):
     it is fair game. Garbage by dtype: int8 gets full-range values,
     other ints get 1 (a plausible time / a *valid-looking* segment id —
     strictly nastier than the -1 "masked" sentinel fresh caches use),
-    floats get huge noise. Test sizes must keep ``max_len`` and the slot
-    count distinct from every other axis length.
+    floats get huge noise with NaN sprinkled in — ``0 * NaN`` is NaN,
+    so a masked row's weight being zero is NOT enough; the decode
+    kernels must zero unreachable *values* too (they do — that contract
+    is what keeps a NaN-poisoned quarantined lane's debris harmless,
+    see ``docs/robustness.md``). Test sizes must keep ``max_len`` and
+    the slot count distinct from every other axis length.
     """
     rng = np.random.default_rng(seed)
     n = len(cursors)
@@ -53,6 +57,7 @@ def scribble_stale_rows(cache, cursors, max_len: int, seed: int = 0):
             junk = np.ones(shape, x_np.dtype)
         else:
             junk = (rng.standard_normal(shape) * 100.0).astype(x_np.dtype)
+            junk[rng.random(shape) < 0.25] = np.nan
         return np.where(stale, junk, x_np)
 
     return jax.tree.map(leaf, cache)

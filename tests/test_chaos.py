@@ -1,0 +1,501 @@
+"""Fault-injection / self-healing tests (the chaos layer).
+
+Covers the contracts ``docs/robustness.md`` promises and
+``repro.launch.chaos`` drills end-to-end:
+  * FaultPlan determinism (seeded schedules, recorded firings);
+  * checkpoint corruption matrix — truncated ``arrays.npz``, missing
+    manifest, bit-flipped array (CRC mismatch), interrupted ``.tmp`` —
+    each falls back to the previous verified step with a reported
+    reason;
+  * async-save IO failures: bounded retry + backoff, daemon-thread
+    errors surfaced at ``wait()`` / the next ``save()``;
+  * data-worker failures: bounded retries then ``DataWorkerError`` on
+    the consumer thread (never a hang, never a silent respawn loop),
+    cursor un-advanced so a fixed cause resumes exactly;
+  * NaN-poisoned serving slots: quarantined with a reason while every
+    healthy lane stays bit-identical to a fault-free run;
+  * NaN-halt checkpoints: tagged ``halt_reason`` and refused on blind
+    resume without ``force``.
+"""
+import importlib.util
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import chaos
+from repro.checkpoint import CheckpointManager, CheckpointWriteError
+from repro.data.pipeline import DataWorkerError, ShardedIterator
+from repro.nn import module as nnm
+from repro.nn.agent_sim import AgentSimConfig, AgentSimModel
+from repro.runtime.sim_server import SceneRequest, SimServer
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.scenarios import ScenarioConfig
+from repro.scenarios.registry import generate_mixed
+from tests.serving_utils import assert_bit_identical
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        chaos.Fault("not_a_kind", at=0)
+    with pytest.raises(ValueError):
+        chaos.Fault("delay_tick", at=-1)
+    with pytest.raises(ValueError):
+        chaos.Fault("delay_tick", at=0, count=0)
+
+
+def test_fault_plan_covers_and_records():
+    plan = chaos.FaultPlan([chaos.Fault("delay_tick", at=3, count=2)])
+    clock = chaos.Clock()
+    hits = [plan.fires("delay_tick", clock.next()) is not None
+            for _ in range(6)]
+    assert hits == [False, False, False, True, True, False]
+    assert plan.fired_counts() == {"delay_tick": 2}
+    assert [f["clock"] for f in plan.fired] == [3, 4]
+
+
+def test_fault_plan_rng_deterministic():
+    a = chaos.FaultPlan(seed=7).rng(1).integers(0, 1 << 30, 8)
+    b = chaos.FaultPlan(seed=7).rng(1).integers(0, 1 << 30, 8)
+    c = chaos.FaultPlan(seed=8).rng(1).integers(0, 1 << 30, 8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: corruption matrix -> verified fallback restore
+# ---------------------------------------------------------------------------
+
+def _tree(step):
+    rng = np.random.default_rng(step)
+    return {"w": rng.standard_normal((4, 5)).astype(np.float32),
+            "b": np.full(3, step, np.float32)}
+
+
+def _save_two(d):
+    mgr = CheckpointManager(str(d), async_save=False)
+    mgr.save(1, _tree(1), extra={"step": 1})
+    mgr.save(2, _tree(2), extra={"step": 2})
+    return mgr
+
+
+CORRUPTIONS = ["truncate_checkpoint_npz", "bitflip_checkpoint_array",
+               "drop_checkpoint_manifest"]
+
+
+@pytest.mark.parametrize("mode", CORRUPTIONS)
+def test_corrupt_latest_falls_back_with_reason(tmp_path, mode):
+    _save_two(tmp_path)
+    detail = chaos.corrupt_checkpoint(str(tmp_path), mode)
+    assert detail["step"] == 2
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.verify(2) is not None        # corruption is detectable
+    assert mgr.verify(1) is None
+    tree, extra = mgr.restore(fallback=True)
+    assert int(extra["step"]) == 1
+    for k, v in _tree(1).items():
+        assert_bit_identical(tree[k], v, f"fallback restore {k}")
+    rep = mgr.last_restore_report
+    assert rep["step"] == 1
+    assert [s["step"] for s in rep["skipped"]] == [2]
+    assert rep["skipped"][0]["reason"]      # human-readable cause
+
+
+def test_every_step_corrupt_raises_listing_reasons(tmp_path):
+    # all checkpoints bad is NOT a fresh start: restarting from scratch
+    # silently would be the worst possible "recovery"
+    _save_two(tmp_path)
+    chaos.corrupt_checkpoint(str(tmp_path), "truncate_checkpoint_npz", step=2)
+    chaos.corrupt_checkpoint(str(tmp_path), "drop_checkpoint_manifest",
+                             step=1)
+    with pytest.raises(IOError, match="no checkpoint passed"):
+        CheckpointManager(str(tmp_path)).restore(fallback=True)
+
+
+def test_empty_directory_restores_nothing(tmp_path):
+    tree, extra = CheckpointManager(str(tmp_path)).restore(fallback=True)
+    assert tree is None and extra is None
+
+
+def test_explicit_strict_restore_raises_on_corruption(tmp_path):
+    _save_two(tmp_path)
+    chaos.corrupt_checkpoint(str(tmp_path), "bitflip_checkpoint_array")
+    with pytest.raises(IOError):
+        CheckpointManager(str(tmp_path)).restore(2)
+
+
+def test_interrupted_tmp_is_invisible_and_swept(tmp_path):
+    _save_two(tmp_path)
+    detail = chaos.corrupt_checkpoint(str(tmp_path), "stale_checkpoint_tmp")
+    assert os.path.isdir(detail["dir"])
+    # a half-written .tmp never shows up as a restorable step...
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.available_steps() == [1, 2]
+    assert mgr.latest_step() == 2
+    # ...and manager startup swept the debris
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    tree, extra = mgr.restore(fallback=True)
+    assert int(extra["step"]) == 2
+
+
+def test_legacy_manifest_without_crc_still_restores(tmp_path):
+    import json
+    _save_two(tmp_path)
+    # simulate a pre-CRC checkpoint: strip the crc32 block from step 2
+    man = os.path.join(str(tmp_path), "step_0000000002", "manifest.json")
+    with open(man) as f:
+        m = json.load(f)
+    del m["crc32"]
+    with open(man, "w") as f:
+        json.dump(m, f)
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.verify(2) is None            # structural checks only
+    _, extra = mgr.restore(fallback=True)
+    assert int(extra["step"]) == 2
+
+
+def test_resave_same_step_keeps_readers_consistent(tmp_path):
+    # the rename-aside swap: re-saving an existing step must never leave
+    # a window where the step vanishes or half-deleted dirs are listed
+    mgr = CheckpointManager(str(tmp_path), async_save=False, keep=2)
+    for step in (1, 2, 2, 3, 4):            # includes a same-step re-save
+        mgr.save(step, _tree(step), extra={"step": step})
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    assert mgr.available_steps() == [3, 4]  # keep=2 GC'd the rest
+    for s in (3, 4):
+        assert mgr.verify(s) is None
+
+
+# ---------------------------------------------------------------------------
+# async save: bounded retry, surfaced daemon-thread errors
+# ---------------------------------------------------------------------------
+
+def test_async_save_transient_io_retries_to_success(tmp_path):
+    plan = chaos.FaultPlan([chaos.Fault("fail_async_save_io", at=0, count=2)])
+    mgr = CheckpointManager(str(tmp_path), save_retries=2, retry_backoff=0.01,
+                            io_hook=chaos.checkpoint_io_hook(plan))
+    mgr.save(5, _tree(5), extra={"step": 5})
+    mgr.wait()                              # retries absorbed the failures
+    assert plan.fired_counts()["fail_async_save_io"] == 2
+    assert mgr.verify(5) is None
+    tree, _ = mgr.restore(5)
+    assert_bit_identical(tree["w"], _tree(5)["w"], "post-retry restore")
+
+
+def test_async_save_persistent_io_surfaces_at_wait(tmp_path):
+    plan = chaos.FaultPlan(
+        [chaos.Fault("fail_async_save_io", at=0, count=10 ** 6)])
+    mgr = CheckpointManager(str(tmp_path), save_retries=1, retry_backoff=0.01,
+                            io_hook=chaos.checkpoint_io_hook(plan))
+    mgr.save(1, _tree(1))
+    with pytest.raises(CheckpointWriteError):
+        mgr.wait()
+    assert mgr.latest_step() is None        # nothing half-published
+    # the error is one-shot: after surfacing, the manager keeps working
+    mgr.io_hook = None
+    mgr.save(2, _tree(2), extra={"step": 2})
+    mgr.wait()
+    assert mgr.verify(2) is None
+
+
+def test_async_save_error_surfaces_on_next_save(tmp_path):
+    plan = chaos.FaultPlan(
+        [chaos.Fault("fail_async_save_io", at=0, count=10 ** 6)])
+    mgr = CheckpointManager(str(tmp_path), save_retries=0, retry_backoff=0.01,
+                            io_hook=chaos.checkpoint_io_hook(plan))
+    mgr.save(1, _tree(1))
+    time.sleep(0.2)                         # let the daemon thread fail
+    with pytest.raises(CheckpointWriteError):
+        mgr.save(2, _tree(2))               # surfaced here, not lost
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: worker failures propagate, bounded, resumable
+# ---------------------------------------------------------------------------
+
+def _batch_fn(seed, index, batch):
+    rng = np.random.default_rng(seed + index)
+    return {"x": rng.standard_normal((batch, 3)).astype(np.float32)}
+
+
+def test_dead_worker_raises_bounded_not_hang():
+    plan = chaos.FaultPlan(
+        [chaos.Fault("kill_data_worker", at=0, count=10 ** 6)])
+    it = ShardedIterator(chaos.flaky_make_batch(_batch_fn, plan),
+                         batch_size=2, worker_retries=2, retry_backoff=0.01)
+    t0 = time.perf_counter()
+    with pytest.raises(DataWorkerError, match="after 3 attempts"):
+        next(it)
+    assert time.perf_counter() - t0 < 30.0
+    assert plan.fired_counts()["kill_data_worker"] == 3
+    assert it.cursor == 0                   # NOT advanced past the failure
+    it.close()
+
+
+def test_worker_transient_failure_stream_unchanged():
+    clean_it = ShardedIterator(_batch_fn, batch_size=2)
+    clean = [next(clean_it) for _ in range(3)]
+    clean_it.close()
+    plan = chaos.FaultPlan([chaos.Fault("kill_data_worker", at=1, count=2)])
+    it = ShardedIterator(chaos.flaky_make_batch(_batch_fn, plan),
+                         batch_size=2, worker_retries=2, retry_backoff=0.01)
+    got = [next(it) for _ in range(3)]
+    it.close()
+    assert plan.fired_counts()["kill_data_worker"] == 2
+    for i, (g, c) in enumerate(zip(got, clean)):
+        assert_bit_identical(g["x"], c["x"], f"batch {i} after retries")
+
+
+def test_worker_error_then_fixed_resumes_at_same_cursor():
+    # one hard failure burns the whole retry budget; once the cause is
+    # gone, the next __next__ resumes from the SAME cursor
+    plan = chaos.FaultPlan([chaos.Fault("kill_data_worker", at=0, count=3)])
+    it = ShardedIterator(chaos.flaky_make_batch(_batch_fn, plan),
+                         batch_size=2, worker_retries=2, retry_backoff=0.01)
+    with pytest.raises(DataWorkerError):
+        next(it)
+    assert it.cursor == 0
+    got = next(it)                          # respawned from cursor 0
+    it.close()
+    assert_bit_identical(got["x"], _batch_fn(0, 0, 2)["x"],
+                         "post-fix resume batch")
+    assert it.cursor == 1
+
+
+def test_worker_checkpoint_state_survives_error():
+    plan = chaos.FaultPlan([chaos.Fault("kill_data_worker", at=2, count=10)])
+    it = ShardedIterator(chaos.flaky_make_batch(_batch_fn, plan),
+                         batch_size=2, worker_retries=0, retry_backoff=0.01)
+    next(it), next(it)
+    state = it.state_dict()
+    with pytest.raises(DataWorkerError):
+        next(it)
+    assert it.state_dict() == state         # error did not corrupt cursor
+    it.close()
+
+
+# ---------------------------------------------------------------------------
+# serving: NaN-poisoned slot -> quarantine, healthy lanes bit-identical
+# ---------------------------------------------------------------------------
+
+SCEN = ScenarioConfig(num_map=8, num_agents=3, num_steps=6)
+T_HIST = 3
+
+
+def _model(seed=0):
+    cfg = AgentSimConfig(d_model=32, num_layers=2, num_heads=2, head_dim=12,
+                         d_ff=64, num_actions=SCEN.num_actions,
+                         encoding="se2_fourier", attn_impl="ref")
+    model = AgentSimModel(cfg)
+    return model, nnm.init_params(model.specs(), jax.random.key(seed))
+
+
+MODEL, PARAMS = _model()
+
+
+def _serve(poison_tick=None, poison_slot=0):
+    srv = SimServer(MODEL, PARAMS, SCEN, num_slots=2)
+    for i, scene in enumerate(generate_mixed(5, 0, 3, SCEN)):
+        srv.submit(SceneRequest(uid=i, tensors=scene, t_hist=T_HIST,
+                                seed=11, scene_id=i))
+    tick = 0
+    while srv.queue or any(s.req for s in srv.slots):
+        if tick == poison_tick:
+            chaos.poison_server_slot(srv, poison_slot)
+        srv.tick()
+        tick += 1
+        assert tick < 1000
+    srv.flush()
+    return srv
+
+
+def test_quarantine_marks_victim_and_counts():
+    srv = _serve(poison_tick=4)
+    victim = srv.done[0]
+    assert victim.status == "failed"
+    assert victim.reason == "nonfinite_pose"
+    assert srv.quarantined == 1
+    assert srv.stats()["quarantined"] == 1.0
+    # quarantine emits an event + counter for the fleet monitors
+    # (srv.obs is the process-default registry, shared across tests:
+    # assert presence/monotonicity, not exact totals)
+    assert srv.obs.counter("sim_server.quarantined").value >= 1
+    kinds = [e["name"] for e in srv.obs.events()]
+    assert "sim_server.quarantine" in kinds
+
+
+def test_quarantine_healthy_lanes_bit_identical():
+    ref = _serve(poison_tick=None)
+    assert all(r.status == "ok" for r in ref.done.values())
+    srv = _serve(poison_tick=4)
+    healthy = [u for u, r in srv.done.items() if r.status == "ok"]
+    assert sorted(healthy) == [1, 2]        # everyone but the victim
+    for uid in healthy:
+        assert_bit_identical(srv.done[uid].future, ref.done[uid].future,
+                             f"lane {uid} poses under quarantine")
+        assert_bit_identical(srv.done[uid].actions, ref.done[uid].actions,
+                             f"lane {uid} actions under quarantine")
+
+
+def test_quarantined_slot_serves_next_tenant_bit_exact():
+    ref = _serve(poison_tick=None)
+    srv = _serve(poison_tick=3)             # poison uid 0 early in rollout
+    assert srv.done[0].status == "failed"
+    # a new lane through the recycled server reproduces the fault-free
+    # result for the same request
+    scene = generate_mixed(5, 0, 3, SCEN)[2]
+    srv2_uid = 7
+    srv.submit(SceneRequest(uid=srv2_uid, tensors=scene, t_hist=T_HIST,
+                            seed=11, scene_id=2))
+    srv.run_until_drained()
+    assert srv.done[srv2_uid].status == "ok"
+    assert_bit_identical(srv.done[srv2_uid].future, ref.done[2].future,
+                         "recycled-slot tenant poses")
+
+
+def test_serve_scenes_raises_on_quarantine():
+    from repro.runtime.sim_server import serve_scenes
+    # serve_scenes stacks futures; a quarantined lane must surface as an
+    # error, never silently as a zero-filled row in the stack
+    srv = SimServer(MODEL, PARAMS, SCEN, num_slots=2)
+    orig_tick, calls = srv.tick, {"n": 0}
+
+    def poisoning_tick():
+        if calls["n"] == 4:
+            chaos.poison_server_slot(srv, 0)
+        calls["n"] += 1
+        return orig_tick()
+
+    srv.tick = poisoning_tick
+    with pytest.raises(RuntimeError, match="quarantined"):
+        serve_scenes(srv, generate_mixed(5, 0, 2, SCEN), t_hist=T_HIST,
+                     n_samples=1, seed=11)
+
+
+# ---------------------------------------------------------------------------
+# trainer: NaN-halt checkpoints are tagged and refuse blind resume
+# ---------------------------------------------------------------------------
+
+class _ListData:
+    """Minimal checkpointable data source for trainer-contract tests."""
+
+    def __init__(self):
+        self.cursor = 0
+
+    def __next__(self):
+        self.cursor += 1
+        return {"x": np.zeros(2, np.float32)}
+
+    def state_dict(self):
+        return {"cursor": self.cursor}
+
+    def load_state_dict(self, s):
+        self.cursor = int(s["cursor"])
+
+    def close(self):
+        pass
+
+
+def _nan_step(params, opt_state, batch):
+    return params, opt_state, {"loss": math.nan}
+
+
+def test_nan_halt_tags_checkpoint_and_refuses_blind_resume(tmp_path):
+    tr = Trainer(_nan_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                 str(tmp_path), TrainerConfig(total_steps=10, ckpt_every=100,
+                                              max_consecutive_nans=2))
+    with pytest.raises(FloatingPointError):
+        tr.run()
+    # the halt checkpoint exists and is tagged
+    mgr = CheckpointManager(str(tmp_path))
+    _, extra = mgr.restore(fallback=True)
+    assert extra["halt_reason"] == "nan"
+    # a blind relaunch refuses...
+    tr2 = Trainer(_nan_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                  str(tmp_path), TrainerConfig(total_steps=10))
+    with pytest.raises(RuntimeError, match="--force"):
+        tr2.restore_if_available()
+    # ...and force=True acknowledges and proceeds
+    tr3 = Trainer(_nan_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                  str(tmp_path), TrainerConfig(total_steps=10))
+    assert tr3.restore_if_available(force=True)
+
+
+def test_clean_checkpoint_resumes_without_force(tmp_path):
+    def ok_step(params, opt_state, batch):
+        return params, opt_state, {"loss": 0.5}
+
+    tr = Trainer(ok_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                 str(tmp_path), TrainerConfig(total_steps=4, ckpt_every=2))
+    tr.run()
+    tr2 = Trainer(ok_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                  str(tmp_path), TrainerConfig(total_steps=4))
+    assert tr2.restore_if_available()       # no force needed
+    assert tr2.step == 4
+
+
+def test_trainer_fallback_counts_skipped_steps(tmp_path):
+    def ok_step(params, opt_state, batch):
+        return params, opt_state, {"loss": 0.5}
+
+    tr = Trainer(ok_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                 str(tmp_path), TrainerConfig(total_steps=4, ckpt_every=2))
+    tr.run()
+    chaos.corrupt_checkpoint(str(tmp_path), "truncate_checkpoint_npz")
+    tr2 = Trainer(ok_step, {"w": np.zeros(2, np.float32)}, {}, _ListData(),
+                  str(tmp_path), TrainerConfig(total_steps=4))
+    assert tr2.restore_if_available()
+    assert tr2.step == 2                    # fell back past the corrupt 4
+    assert tr2.obs.counter("trainer.ckpt_fallback").value >= 1
+
+
+# ---------------------------------------------------------------------------
+# bench schema: the committed BENCH_chaos.json is pinned
+# ---------------------------------------------------------------------------
+
+def _load_bench_schema():
+    spec = importlib.util.spec_from_file_location(
+        "bench_schema", os.path.join(ROOT, "benchmarks", "bench_schema.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_chaos_bench_schema_catches_regressions():
+    bs = _load_bench_schema()
+    good = {
+        "kind": "chaos_drill", "seed": 0, "wall_s": 10.0, "n_scenarios": 5,
+        "all_passed": True,
+        "scenarios": {
+            name: {"passed": True, "wall_s": 1.0, "bundle": f"{name}.json"}
+            for name in bs.CHAOS_SCENARIOS}}
+    good["scenarios"]["nan_slot_quarantine"].update({
+        dt: {"healthy_bit_identical": True, "recycle_bit_identical": True}
+        for dt in ("float32", "int8")})
+    c = bs._Check("BENCH_chaos.json")
+    bs.check_chaos(good, c)
+    assert c.problems == []
+    # a drill that shrank or failed must not pass the schema
+    bad = {**good, "scenarios": dict(good["scenarios"]), "all_passed": False}
+    del bad["scenarios"]["dead_worker"]
+    c2 = bs._Check("BENCH_chaos.json")
+    bs.check_chaos(bad, c2)
+    assert any("all_passed" in p for p in c2.problems)
+    assert any("dead_worker" in p for p in c2.problems)
+
+
+def test_committed_chaos_record_passes_schema():
+    bs = _load_bench_schema()
+    path = os.path.join(ROOT, "BENCH_chaos.json")
+    assert os.path.exists(path), "BENCH_chaos.json must be committed"
+    assert bs.check_file(path) == []
